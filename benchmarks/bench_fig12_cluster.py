@@ -1,0 +1,40 @@
+"""Fig. 12/13 — CLUSTER512 (and CLUSTER2048 in --full) key indicators for
+every strategy: Avg.JRT / JWT / JCT / Stability."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import (CLUSTER512, CLUSTER512_OCS, CLUSTER2048,
+                        CLUSTER2048_OCS, cluster_dataset, simulate)
+
+from .common import N_JOBS_FAST, N_JOBS_FULL, timed
+
+STRATS = ("best", "ocs-vclos", "vclos", "sr", "balanced", "ecmp")
+
+
+def run(fast: bool = True):
+    rows = []
+    n_jobs = N_JOBS_FAST if fast else N_JOBS_FULL
+    jobs = cluster_dataset(num_jobs=n_jobs, lam=120.0, seed=0)
+    for strat in STRATS:
+        spec = CLUSTER512_OCS if strat == "ocs-vclos" else CLUSTER512
+        def work(s=strat, sp=spec):
+            rep = simulate(sp, jobs, s)
+            return {k: round(v, 1) for k, v in rep.row().items()}
+        rows.append(timed(f"fig12_cluster512[{strat}]", work))
+    if not fast:
+        jobs2k = cluster_dataset(num_jobs=n_jobs, lam=15.0, seed=0,
+                                 max_gpus=512)
+        for strat in STRATS:
+            spec = CLUSTER2048_OCS if strat == "ocs-vclos" else CLUSTER2048
+            def work(s=strat, sp=spec):
+                rep = simulate(sp, jobs2k, s)
+                return {k: round(v, 1) for k, v in rep.row().items()}
+            rows.append(timed(f"fig13_cluster2048[{strat}]", work))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run())

@@ -1,0 +1,52 @@
+"""Fig. 2 — hash-collision flow-contention proportions vs cluster size."""
+
+from __future__ import annotations
+
+from collections import Counter
+
+import numpy as np
+
+from repro.core.routing import ECMPRouting, contention
+from repro.core.topology import CLUSTER512, CLUSTER2048, ClusterSpec
+from repro.core.traffic import Flow
+
+from .common import timed
+
+SIZES = {
+    "64gpu": ClusterSpec(num_leafs=2, num_spines=32, gpus_per_leaf=32,
+                         gpus_per_server=8),
+    "512gpu": CLUSTER512,
+    "2048gpu": CLUSTER2048,
+}
+
+
+def _collision_profile(spec: ClusterSpec, trials: int, seed0: int = 0):
+    """Random cross-leaf permutation traffic under ECMP; histogram of the
+    worst per-flow link load (1 = no contention ... 6+ = paper's extreme)."""
+    hist: Counter = Counter()
+    total = 0
+    rng = np.random.default_rng(seed0)
+    for t in range(trials):
+        n = spec.num_gpus
+        perm = rng.permutation(n)
+        phase = [Flow(i, int(perm[i]), 1.0) for i in range(n)
+                 if spec.leaf_of_gpu(i) != spec.leaf_of_gpu(int(perm[i]))]
+        rep = contention(phase, ECMPRouting(spec, seed=t))
+        for m in rep.per_flow_max:
+            hist[min(m, 6)] += 1
+            total += 1
+    return {f"x{k}": round(v / total, 4) for k, v in sorted(hist.items())}
+
+
+def run(fast: bool = True):
+    trials = 5 if fast else 20
+    rows = []
+    for name, spec in SIZES.items():
+        rows.append(timed(f"fig2_hash_collision[{name}]",
+                          lambda s=spec: _collision_profile(s, trials)))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run())

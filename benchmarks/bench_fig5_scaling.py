@@ -1,0 +1,54 @@
+"""Fig. 5 — scaling factor: ECMP vs contention-free, per model × #GPUs."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.jobs import Job
+from repro.core.routing import ECMPRouting, SourceRouting, contention
+from repro.core.topology import TESTBED32
+
+from .common import timed
+
+
+def _scaling_factor(model: str, n: int, batch: int, routing_kind: str,
+                    seed: int = 0) -> float:
+    """T_n / (n·T_1) on the paper's 32-V100 testbed fabric; HD allreduce
+    (the collision-prone collective — every step is all-cross once the job
+    spans both leafs) under the job's own routed flows."""
+    spec = TESTBED32
+    job = Job(0, model, n, batch, 0.0, 1, allreduce_algo="hd")
+    gpus = list(range(n))  # leaf-contiguous placement
+    if routing_kind == "ecmp":
+        routing = ECMPRouting(spec, seed=seed)
+    else:
+        routing = SourceRouting(spec)
+    worst = 1
+    for kind, phase in job.phases(gpus):
+        rep = contention(phase, routing)
+        worst = max(worst, rep.max_load)
+    t1 = job.compute_time()  # single-GPU iter (no comm)
+    tn = job.iter_time(1.0 / worst, link_gbps=spec.link_gbps)
+    # throughput per GPU relative to single-GPU throughput
+    return (t1 / tn)
+
+
+def run(fast: bool = True):
+    rows = []
+    models = [("vgg16", 32), ("resnet50", 32), ("bert", 4), ("moe", 8)]
+    sizes = [8, 16, 32] if fast else [8, 16, 32, 64, 128]
+    for model, batch in models:
+        for n in sizes:
+            def work(m=model, b=batch, nn=n):
+                sf_ecmp = float(np.mean([_scaling_factor(m, nn, b, "ecmp", s)
+                                         for s in range(8)]))
+                sf_cf = _scaling_factor(m, nn, b, "sr")
+                return {"sf_ecmp": round(sf_ecmp, 3),
+                        "sf_contention_free": round(sf_cf, 3)}
+            rows.append(timed(f"fig5_scaling[{model},n={n}]", work))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run())

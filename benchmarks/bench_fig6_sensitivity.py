@@ -1,0 +1,27 @@
+"""Fig. 6 — two-flow contention throughput drop per model/batch/bandwidth."""
+
+from __future__ import annotations
+
+from repro.core.jobs import BATCHES, Job
+
+from .common import timed
+
+
+def run(fast: bool = True):
+    rows = []
+    for model, batches in BATCHES.items():
+        for batch in batches:
+            for gbps in ((100,) if fast else (25, 50, 100)):
+                def work(m=model, b=batch, g=gbps):
+                    j = Job(0, m, 8, b, 0.0, 1)
+                    t1 = j.iter_time(1.0, link_gbps=g)
+                    t2 = j.iter_time(0.5, link_gbps=g)  # two-flow contention
+                    return {"throughput_drop": round(1 - t1 / t2, 3)}
+                rows.append(timed(
+                    f"fig6_sensitivity[{model},bs={batch},{gbps}G]", work))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run())

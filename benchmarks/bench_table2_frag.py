@@ -1,0 +1,29 @@
+"""Table 2 — fragmentation counts (GPU vs network) for vClos / OCS-vClos
+across arrival rates λ."""
+
+from __future__ import annotations
+
+from repro.core import CLUSTER512, CLUSTER512_OCS, cluster_dataset, simulate
+
+from .common import N_JOBS_FAST, N_JOBS_FULL, timed
+
+
+def run(fast: bool = True):
+    n_jobs = N_JOBS_FAST if fast else N_JOBS_FULL
+    lams = (100, 120) if fast else (100, 110, 120, 130)
+    rows = []
+    for lam in lams:
+        jobs = cluster_dataset(num_jobs=n_jobs, lam=float(lam), seed=0)
+        for strat, spec in (("vclos", CLUSTER512),
+                            ("ocs-vclos", CLUSTER512_OCS)):
+            def work(j=jobs, s=strat, sp=spec):
+                rep = simulate(sp, j, s)
+                return {"frag_gpu": rep.frag_gpu,
+                        "frag_network": rep.frag_network}
+            rows.append(timed(f"table2_frag[lam={lam},{strat}]", work))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run())

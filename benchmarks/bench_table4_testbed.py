@@ -1,0 +1,34 @@
+"""Table 4 / Fig. 10 — testbed-style 100-job workload on the 32-GPU fabric:
+Avg.JRT / Avg.JWT for ECMP, rECMP (+50% links), SR, vClos."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import TESTBED32, simulate, testbed_dataset
+from repro.core.topology import ClusterSpec
+
+from .common import timed
+
+RECMP32 = dataclasses.replace(TESTBED32, num_spines=12, uplink_factor=1.5)
+
+
+def run(fast: bool = True):
+    jobs = testbed_dataset(num_jobs=100, seed=0, mean_interarrival=20.0)
+    rows = []
+    for name, strat, spec in (
+            ("ECMP", "ecmp", TESTBED32),
+            ("Redundance", "ecmp", RECMP32),
+            ("SR", "sr", TESTBED32),
+            ("vClos", "vclos", TESTBED32)):
+        def work(s=strat, sp=spec):
+            rep = simulate(sp, jobs, s)
+            return {"avg_jrt": round(rep.avg_jrt, 2),
+                    "avg_jwt": round(rep.avg_jwt, 2)}
+        rows.append(timed(f"table4_testbed[{name}]", work))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run())

@@ -1,0 +1,30 @@
+"""Table 5 — Avg.JCT vs arrival rate λ per strategy (workload sensitivity),
+including the OCS-Relax (locality relaxed) cautionary column."""
+
+from __future__ import annotations
+
+from repro.core import CLUSTER512, CLUSTER512_OCS, cluster_dataset, simulate
+
+from .common import N_JOBS_FAST, N_JOBS_FULL, timed
+
+STRATS = ("ocs-vclos", "vclos", "best", "sr", "balanced", "ecmp", "ocs-relax")
+
+
+def run(fast: bool = True):
+    n_jobs = N_JOBS_FAST if fast else N_JOBS_FULL
+    lams = (120, 140) if fast else (100, 110, 120, 130, 140)
+    rows = []
+    for lam in lams:
+        jobs = cluster_dataset(num_jobs=n_jobs, lam=float(lam), seed=0)
+        for strat in STRATS:
+            spec = CLUSTER512_OCS if strat.startswith("ocs") else CLUSTER512
+            def work(s=strat, sp=spec, j=jobs):
+                rep = simulate(sp, j, s)
+                return {"avg_jct": round(rep.avg_jct, 1)}
+            rows.append(timed(f"table5_jct[lam={lam},{strat}]", work))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run())

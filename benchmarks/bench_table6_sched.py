@@ -1,0 +1,29 @@
+"""Table 6 — job-scheduler sensitivity: FIFO / EDF / FF (fewest-GPU-first)."""
+
+from __future__ import annotations
+
+from repro.core import CLUSTER512, CLUSTER512_OCS, cluster_dataset, simulate
+
+from .common import N_JOBS_FAST, N_JOBS_FULL, timed
+
+STRATS = ("ocs-vclos", "vclos", "best", "sr", "ecmp")
+
+
+def run(fast: bool = True):
+    n_jobs = N_JOBS_FAST if fast else N_JOBS_FULL
+    jobs = cluster_dataset(num_jobs=n_jobs, lam=120.0, seed=0,
+                           with_deadlines=True)
+    rows = []
+    for sched in ("fifo", "edf", "ff"):
+        for strat in STRATS:
+            spec = CLUSTER512_OCS if strat == "ocs-vclos" else CLUSTER512
+            def work(s=strat, sc=sched, sp=spec):
+                rep = simulate(sp, jobs, s, scheduler=sc)
+                return {"avg_jct": round(rep.avg_jct, 1)}
+            rows.append(timed(f"table6_sched[{sched},{strat}]", work))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run())

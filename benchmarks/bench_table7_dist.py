@@ -1,0 +1,32 @@
+"""Table 7 — TPUv4-style large-job distribution: vClos ≈ OCS-vClos when
+jobs are big/regular (less fragmentation surface)."""
+
+from __future__ import annotations
+
+from repro.core import (CLUSTER512, CLUSTER512_OCS, TPUV4_SIZE_MIX,
+                        cluster_dataset, simulate)
+
+from .common import N_JOBS_FAST, N_JOBS_FULL, timed
+
+STRATS = ("ocs-vclos", "vclos", "best", "sr", "ecmp")
+
+
+def run(fast: bool = True):
+    n_jobs = (N_JOBS_FAST if fast else N_JOBS_FULL) // 2
+    jobs = cluster_dataset(num_jobs=n_jobs, lam=400.0, seed=0,
+                           size_mix=TPUV4_SIZE_MIX)
+    rows = []
+    for strat in STRATS:
+        spec = CLUSTER512_OCS if strat == "ocs-vclos" else CLUSTER512
+        def work(s=strat, sp=spec):
+            rep = simulate(sp, jobs, s)
+            return {"avg_jrt": round(rep.avg_jrt, 1),
+                    "avg_jwt": round(rep.avg_jwt, 1),
+                    "avg_jct": round(rep.avg_jct, 1)}
+        rows.append(timed(f"table7_tpuv4[{strat}]", work))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run())

@@ -1,0 +1,32 @@
+"""Shared benchmark plumbing: timing, CSV rows, fast/full switches.
+
+Every module exposes ``run(fast=True) -> list[dict]``; rows carry
+``name`` (table/figure id), ``us_per_call`` (wall time of the producing
+computation) and ``derived`` (the reproduced quantity).  ``--full`` scales
+job counts to the paper's 5000-task datasets.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Any, Callable, Dict, List
+
+
+def timed(name: str, fn: Callable[[], Any]) -> Dict[str, Any]:
+    t0 = time.time()
+    out = fn()
+    dt = (time.time() - t0) * 1e6
+    return {"name": name, "us_per_call": round(dt, 1), "derived": out}
+
+
+def emit(rows: List[Dict[str, Any]]) -> None:
+    for r in rows:
+        derived = r["derived"]
+        if not isinstance(derived, str):
+            derived = json.dumps(derived, sort_keys=True)
+        print(f"{r['name']},{r['us_per_call']},{derived}")
+
+
+N_JOBS_FAST = 400
+N_JOBS_FULL = 5000

@@ -1,0 +1,72 @@
+"""Insert the roofline + perf-comparison tables into EXPERIMENTS.md.
+
+  PYTHONPATH=src python -m benchmarks.fill_experiments
+"""
+
+import json
+import os
+import re
+
+from .roofline import ARCH_ORDER, SHAPE_ORDER, fmt_row, load_cells
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+ART = os.path.join(ROOT, "artifacts", "dryrun")
+
+HILLCLIMB = [("deepseek-moe-16b", "train_4k"), ("qwen1.5-32b", "train_4k"),
+             ("zamba2-2.7b", "train_4k")]
+ALSO = [("mixtral-8x22b", "train_4k"), ("rwkv6-3b", "train_4k")]
+
+
+def roofline_md() -> str:
+    cols = ["arch", "shape", "status", "t_compute_s", "t_memory_s",
+            "t_collective_s", "dominant", "roofline_frac", "useful_flops",
+            "mem_gib"]
+    lines = ["| " + " | ".join(cols) + " |", "|" + "---|" * len(cols)]
+    for c in load_cells("pod"):
+        row = fmt_row(c)
+        lines.append("| " + " | ".join(str(row.get(k, "—")) for k in cols)
+                     + " |")
+    return "\n".join(lines)
+
+
+def perf_md() -> str:
+    lines = ["| cell | term | paper-faithful baseline | optimized | Δ |",
+             "|---|---|---|---|---|"]
+    for arch, shape in HILLCLIMB + ALSO:
+        bpath = os.path.join(ART, f"{arch}--{shape}--pod-baseline.json")
+        apath = os.path.join(ART, f"{arch}--{shape}--pod.json")
+        if not (os.path.exists(bpath) and os.path.exists(apath)):
+            continue
+        b = json.load(open(bpath))
+        a = json.load(open(apath))
+        if b.get("status") != "ok" or a.get("status") != "ok":
+            continue
+        br, ar = b["roofline"], a["roofline"]
+        for term in ("t_compute", "t_memory", "t_collective",
+                     "useful_flops_ratio"):
+            bv, av = br[term], ar[term]
+            if term == "useful_flops_ratio":
+                delta = f"{av/max(bv,1e-12):.1f}×"
+                lines.append(f"| {arch}×{shape} | useful_flops | {bv:.3f} | "
+                             f"{av:.3f} | {delta} |")
+            else:
+                delta = f"{bv/max(av,1e-12):.2f}× faster"
+                dom = " **(dominant)**" if br["dominant"] == \
+                    term.replace("t_", "") else ""
+                lines.append(f"| {arch}×{shape} | {term}{dom} | {bv:.3f} s | "
+                             f"{av:.3f} s | {delta} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    text = open(path).read()
+    text = text.replace("<!-- ROOFLINE_TABLE -->",
+                        roofline_md(), 1)
+    text = text.replace("<!-- PERF_TABLE -->", perf_md(), 1)
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md tables filled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""§Perf probe: compile one unrolled cell variant and decompose its cost.
+
+  PYTHONPATH=src python -m benchmarks.perf_probe --arch qwen1.5-32b \
+      --shape train_4k [--layers 1] [--mb 1] [--remat full] [--no-fsdp] ...
+
+Prints per-collective wire bytes, FLOPs, HBM bytes — the measurement side
+of the hypothesis→change→measure loop in EXPERIMENTS.md §Perf.
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import RunConfig
+from repro.launch.dryrun import (_aux_ctx, _small_cfg, decode_state_specs,
+                                 sharded_param_specs)
+from repro.launch.hlo_analysis import parse_collectives, cost_summary
+from repro.launch.mesh import make_production_mesh
+from repro.parallel.sharding import (abstract_params, input_shardings,
+                                     input_specs, make_context)
+from repro.train.optimizer import AdamWState, OptimizerConfig, adamw_init
+from repro.train.train_step import make_train_step
+
+import dataclasses as dc
+
+
+def probe(arch: str, shape_name: str, layers: int, mb: int,
+          remat: str = "full", fsdp: bool = True, seq_par: bool = True,
+          batch: int = 0, opt_dtype: str = "float32",
+          ssm_chunk: int = 0, block: int = 0) -> dict:
+    cfg = _small_cfg(get_config(arch), layers)
+    shape_cfg = SHAPES[shape_name]
+    if batch:
+        shape_cfg = dc.replace(shape_cfg, global_batch=batch)
+    mesh = make_production_mesh(multi_pod=False)
+    run_cfg = RunConfig(remat=remat, sequence_parallel=seq_par)
+    ctx = _aux_ctx(make_context(mesh, cfg, run_cfg), shape_cfg)
+    if ssm_chunk:
+        ctx = dc.replace(ctx, ssm_chunk=ssm_chunk)
+    if block:
+        ctx = dc.replace(ctx, block_q=block, block_k=block)
+    view = ctx.mesh
+    params_abs = abstract_params(cfg, dtype=jnp.bfloat16)
+    pshard = sharded_param_specs(params_abs, cfg, view, fsdp=fsdp)
+    t0 = time.time()
+    if shape_cfg.mode == "train":
+        opt_cfg = OptimizerConfig(state_dtype=opt_dtype)
+        step = make_train_step(cfg, opt_cfg, ctx=ctx, microbatches=mb,
+                               unroll=True, grad_shardings=pshard)
+        opt_abs = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params_abs)
+        oshard = (None if opt_dtype == "int8" else
+                  AdamWState(step=NamedSharding(view, P()), m=pshard,
+                             v=pshard))
+        batch_abs = input_specs(cfg, shape_cfg)
+        bshard = input_shardings(cfg, shape_cfg, view)
+        fn = jax.jit(step, in_shardings=(pshard, oshard, None, bshard),
+                     out_shardings=(pshard, oshard, None, None),
+                     donate_argnums=(0, 1))
+        compiled = fn.lower(params_abs, opt_abs, None, batch_abs).compile()
+    elif shape_cfg.mode == "prefill":
+        from repro.models.transformer import forward
+
+        def pf(params, b):
+            extras = {k: v for k, v in b.items() if k != "tokens"}
+            return forward(params, cfg, b["tokens"], ctx=ctx, **extras)[0]
+        batch_abs = input_specs(cfg, shape_cfg)
+        bshard = input_shardings(cfg, shape_cfg, view)
+        compiled = jax.jit(pf, in_shardings=(pshard, bshard)).lower(
+            params_abs, batch_abs).compile()
+    else:
+        from repro.serve.decode import decode_step
+        state_abs, sshard = decode_state_specs(cfg, shape_cfg, view)
+        tok_abs = jax.ShapeDtypeStruct((shape_cfg.global_batch, 1), jnp.int32)
+        dp = int(np.prod([view.shape[n] for n in view.axis_names
+                          if n in ("pod", "data")]))
+        dpax = tuple(n for n in view.axis_names if n in ("pod", "data"))
+        tshard = NamedSharding(view, P(
+            dpax if shape_cfg.global_batch % dp == 0 else None, None))
+        compiled = jax.jit(
+            lambda p, t, s: decode_step(p, cfg, t, s, ctx=ctx),
+            in_shardings=(pshard, tshard, sshard),
+            donate_argnums=(2,)).lower(params_abs, tok_abs, state_abs).compile()
+    costs = cost_summary(compiled)
+    coll = parse_collectives(compiled.as_text())
+    return {
+        "compile_s": round(time.time() - t0, 1),
+        "flops": costs.get("flops", 0.0),
+        "hbm_bytes": costs.get("bytes accessed", 0.0),
+        "wire_by_op": {k: round(v / 1e9, 3) for k, v in
+                       coll.wire_bytes.items()},
+        "counts": dict(coll.count),
+        "total_wire_gb": round(coll.total_wire_bytes / 1e9, 3),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--layers", type=int, default=1)
+    ap.add_argument("--mb", type=int, default=1)
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-sp", action="store_true")
+    ap.add_argument("--batch", type=int, default=0)
+    ap.add_argument("--opt-dtype", default="float32")
+    ap.add_argument("--ssm-chunk", type=int, default=0)
+    ap.add_argument("--block", type=int, default=0)
+    args = ap.parse_args()
+    out = probe(args.arch, args.shape, args.layers, args.mb,
+                remat=args.remat, fsdp=not args.no_fsdp,
+                seq_par=not args.no_sp, batch=args.batch,
+                opt_dtype=args.opt_dtype, ssm_chunk=args.ssm_chunk,
+                block=args.block)
+    print(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

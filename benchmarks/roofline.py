@@ -1,0 +1,95 @@
+"""Roofline reporter: reads artifacts/dryrun/*.json into the §Roofline table.
+
+Usage:  PYTHONPATH=src python -m benchmarks.roofline [--markdown]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+ARCH_ORDER = ["qwen1.5-32b", "nemotron-4-340b", "tinyllama-1.1b", "olmo-1b",
+              "phi-3-vision-4.2b", "whisper-base", "deepseek-moe-16b",
+              "mixtral-8x22b", "zamba2-2.7b", "rwkv6-3b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_cells(mesh: str = "pod", tag: str = "") -> List[Dict]:
+    cells = []
+    suffix = f"-{tag}" if tag else ""
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            path = os.path.join(ART, f"{arch}--{shape}--{mesh}{suffix}.json")
+            if os.path.exists(path):
+                with open(path) as f:
+                    cells.append(json.load(f))
+    return cells
+
+
+def fmt_row(c: Dict) -> Dict:
+    if c.get("status") == "skipped":
+        return {"arch": c["arch"], "shape": c["shape"], "status": "skipped",
+                "note": c.get("reason", "")[:60]}
+    if c.get("status") != "ok":
+        return {"arch": c["arch"], "shape": c["shape"], "status": "ERROR",
+                "note": c.get("error", "")[:80]}
+    r = c["roofline"]
+    dom_t = max(r["t_compute"], r["t_memory"], r["t_collective"])
+    frac = r["t_compute"] / dom_t if dom_t else 0.0
+    return {
+        "arch": c["arch"], "shape": c["shape"], "status": "ok",
+        "t_compute_s": f"{r['t_compute']:.3e}",
+        "t_memory_s": f"{r['t_memory']:.3e}",
+        "t_collective_s": f"{r['t_collective']:.3e}",
+        "dominant": r["dominant"],
+        "roofline_frac": f"{frac:.2f}",
+        "useful_flops": f"{r['useful_flops_ratio']:.2f}",
+        "mem_gib": f"{c.get('memory', {}).get('temp_size_in_bytes', 0)/2**30:.1f}",
+    }
+
+
+def run(fast: bool = True):
+    from .common import timed
+    rows = []
+    cells = load_cells("pod")
+    ok = sum(1 for c in cells if c.get("status") == "ok")
+    skipped = sum(1 for c in cells if c.get("status") == "skipped")
+    err = sum(1 for c in cells if c.get("status") not in ("ok", "skipped"))
+    rows.append(timed("roofline_summary",
+                      lambda: {"cells": len(cells), "ok": ok,
+                               "skipped": skipped, "error": err}))
+    for c in cells:
+        fr = fmt_row(c)
+        rows.append({"name": f"roofline[{c['arch']},{c['shape']}]",
+                     "us_per_call": 0.0, "derived": fr})
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    cells = load_cells(args.mesh, args.tag)
+    if args.markdown:
+        cols = ["arch", "shape", "status", "t_compute_s", "t_memory_s",
+                "t_collective_s", "dominant", "roofline_frac",
+                "useful_flops", "mem_gib"]
+        print("| " + " | ".join(cols) + " |")
+        print("|" + "---|" * len(cols))
+        for c in cells:
+            row = fmt_row(c)
+            print("| " + " | ".join(str(row.get(k, "—")) for k in cols) + " |")
+    else:
+        for c in cells:
+            print(json.dumps(fmt_row(c)))
+
+
+if __name__ == "__main__":
+    main()

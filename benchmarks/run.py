@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig2,table5]
+
+Prints ``name,us_per_call,derived`` CSV (derived = reproduced quantity)."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .common import emit
+
+MODULES = [
+    ("fig2", "benchmarks.bench_fig2_hash"),
+    ("fig5", "benchmarks.bench_fig5_scaling"),
+    ("fig6", "benchmarks.bench_fig6_sensitivity"),
+    ("table2", "benchmarks.bench_table2_frag"),
+    ("table4", "benchmarks.bench_table4_testbed"),
+    ("fig12", "benchmarks.bench_fig12_cluster"),
+    ("table5", "benchmarks.bench_table5_lambda"),
+    ("table6", "benchmarks.bench_table6_sched"),
+    ("table7", "benchmarks.bench_table7_dist"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale datasets (5000 jobs, both clusters)")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = {s.strip() for s in args.only.split(",") if s.strip()}
+    import importlib
+    print("name,us_per_call,derived")
+    failures = 0
+    for key, modname in MODULES:
+        if only and key not in only:
+            continue
+        try:
+            mod = importlib.import_module(modname)
+            emit(mod.run(fast=not args.full))
+        except Exception as e:  # keep the harness running
+            failures += 1
+            print(f"{key},0,\"ERROR: {type(e).__name__}: {e}\"",
+                  file=sys.stdout)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

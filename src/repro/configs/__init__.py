@@ -1,0 +1,16 @@
+"""Assigned-architecture configs.  ``get_config(name)`` / ``--arch <id>``."""
+
+from .base import (ModelConfig, RunConfig, ShapeConfig, SHAPES, get_config,
+                   list_configs, reduced, register)
+
+_LOADED = False
+
+
+def _load_all() -> None:
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    from . import (qwen1_5_32b, nemotron_4_340b, tinyllama_1_1b, olmo_1b,
+                   phi_3_vision_4_2b, whisper_base, deepseek_moe_16b,
+                   mixtral_8x22b, zamba2_2_7b, rwkv6_3b)  # noqa: F401

@@ -1,0 +1,15 @@
+"""Phi-3-vision-4.2B backbone [hf:microsoft/Phi-3-vision-128k-instruct; vlm].
+
+phi3-mini transformer backbone: 32L, d_model 3072, 32 heads (kv=32),
+d_ff 8192, vocab 32064.  The CLIP frontend is a STUB: ``input_specs()``
+provides precomputed patch embeddings merged at the sequence head.
+"""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="phi-3-vision-4.2b", family="vlm",
+    num_layers=32, d_model=3072, num_heads=32, num_kv_heads=32,
+    d_ff=8192, vocab_size=32064,
+    act="silu", norm="rmsnorm", rope_theta=1e4,
+    frontend="patch", num_patches=256,
+))

@@ -1,0 +1,16 @@
+"""Whisper-base backbone [arXiv:2212.04356; audio enc-dec].
+
+6 encoder + 6 decoder layers, d_model 512, 8 heads, d_ff 2048, vocab 51865.
+The conv frame frontend is a STUB: ``input_specs()`` provides precomputed
+frame embeddings; the decoder cross-attends to encoder outputs.
+"""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="whisper-base", family="audio",
+    num_layers=6, encoder_layers=6, is_encoder_decoder=True,
+    d_model=512, num_heads=8, num_kv_heads=8,
+    d_ff=2048, vocab_size=51865,
+    act="gelu", norm="layernorm", rope_theta=1e4,
+    frontend="frames",
+))

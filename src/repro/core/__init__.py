@@ -1,0 +1,39 @@
+"""vClos / OCS-vClos isolated scheduling — the paper's core contribution.
+
+Layers:
+  topology   — Leaf-Spine fabric + OCS layer state
+  traffic    — collective traffic pattern generators (+ executable oracles)
+  routing    — Source Routing / ECMP / Balanced ECMP + contention accounting
+  patterns   — Leaf-wise Permutation (Definition 1) checker
+  placement  — vClos stages 0-2 + FINDVCLOS ILP (Algorithm 1/3)
+  ocs        — OCS-vClos stages + rewiring planner (Algorithm 2/4)
+  fairshare  — max-min fair water-filling (numpy + JAX)
+  jobs       — DML workload profiles + dataset generators
+  simulator  — event-driven flow-level cluster simulator (RapidNetSim-style)
+  scheduler  — online scheduler facade for the training launcher
+  rankmap    — vClos placement -> JAX mesh device order
+  metrics    — JRT / JWT / JCT / Stability
+"""
+
+from .topology import (CLUSTER512, CLUSTER512_OCS, CLUSTER2048,
+                       CLUSTER2048_OCS, TESTBED32, ClusterSpec, FabricState,
+                       OCSLayer)
+from .traffic import (Flow, double_binary_tree_allreduce,
+                      halving_doubling_allreduce, hierarchical_ring_allreduce,
+                      pairwise_alltoall, pipeline_p2p, ring_allreduce)
+from .routing import (BalancedECMPRouting, ContentionReport, ECMPRouting,
+                      IdealRouting, SourceRouting, contention,
+                      contention_histogram)
+from .patterns import is_leafwise_permutation, all_phases_leafwise
+from .placement import (Placement, PlacementFailure, VirtualClos, commit,
+                        find_vclos, release, vclos_place)
+from .ocs import RewirePlanner, ocs_release, ocs_vclos_place
+from .fairshare import maxmin_fair, maxmin_fair_jax, maxmin_fair_numpy
+from .jobs import (BATCHES, PROFILES, Job, ModelProfile, cluster_dataset,
+                   testbed_dataset, HELIOS_SIZE_MIX, TPUV4_SIZE_MIX)
+from .metrics import MetricsReport, job_metrics
+from .simulator import ClusterSimulator, simulate
+from .scheduler import Grant, IsolatedScheduler
+from .rankmap import leaf_contiguous_order, mesh_device_order
+
+__all__ = [name for name in dir() if not name.startswith("_")]

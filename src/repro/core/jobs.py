@@ -1,0 +1,219 @@
+"""DML job model: workloads, communication profiles, dataset generators.
+
+Calibration follows the paper:
+  * Testbed workloads (§8.1, Table 3): VGG16, ResNet50/101, BERT (data
+    parallel, Ring/hierarchical-Ring/HD allreduce) plus MoE and DLRM
+    (pairwise AlltoAll) at the paper's mini-batch sizes.
+  * Per-iteration time model (§3.3 observations): allreduce overlaps with
+    backward compute (coverable fraction), AlltoAll sits on the critical
+    path (uncoverable), so
+        iter(share) = C + max(0, AR/(bw·share) − β·C) + A2A/(bw·share)
+    which reproduces the paper's findings that (1) big-parameter models are
+    sensitive, (2) larger batch ⇒ less sensitive, (3) AlltoAll models are
+    most sensitive, (4) sensitivity is non-linear in the contention level.
+  * Job-size mixes for the Helios-based CLUSTER512/2048 datasets (§9.2) and
+    the TPUv4-style large-job mix (§9.8, Table 7).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import traffic
+from .traffic import Flow, Phase
+
+GBPS = 1e9 / 8  # bytes per second per Gbps
+
+
+@dataclass(frozen=True)
+class ModelProfile:
+    """Static communication/compute profile of one workload family."""
+
+    name: str
+    param_bytes: float            # gradient bytes per allreduce
+    compute_ref: float            # seconds/iter at batch_ref on one V100
+    batch_ref: int
+    alltoall_bytes: float = 0.0   # bytes per GPU per iteration (MoE/DLRM)
+    overlap_beta: float = 0.67    # fraction of compute that can hide AR
+    allreduce_algos: Tuple[str, ...] = ("ring", "hierarchical_ring", "hd")
+
+
+# Profiles sized from public model cards; compute_ref ~ V100 throughputs.
+# AlltoAll volumes are calibrated so two-flow contention reproduces the
+# paper's Fig. 6 throughput drops (MoE/DLRM ≈ -35..50%, VGG16 ≈ -35%,
+# BERT ≈ -30%, ResNets nearly insensitive).
+PROFILES: Dict[str, ModelProfile] = {
+    "vgg16":     ModelProfile("vgg16", 552e6, 0.128, 32),
+    "resnet50":  ModelProfile("resnet50", 102e6, 0.100, 32),
+    "resnet101": ModelProfile("resnet101", 178e6, 0.170, 32),
+    "bert":      ModelProfile("bert", 1.36e9, 0.360, 4),
+    "moe":       ModelProfile("moe", 200e6, 0.070, 8, alltoall_bytes=1.2e9),
+    "dlrm":      ModelProfile("dlrm", 25e6, 0.015, 256, alltoall_bytes=0.85e9),
+}
+
+# Table 3 mini-batch sets
+BATCHES: Dict[str, Tuple[int, ...]] = {
+    "vgg16": (16, 32), "resnet50": (32, 64), "resnet101": (32, 64),
+    "bert": (4, 8), "moe": (8, 16), "dlrm": (256, 512),
+}
+
+
+@dataclass
+class Job:
+    job_id: int
+    model: str
+    num_gpus: int
+    batch_size: int
+    arrival: float
+    num_iters: int
+    allreduce_algo: str = "ring"
+    deadline: Optional[float] = None
+    # filled during simulation
+    start_time: Optional[float] = None
+    finish_time: Optional[float] = None
+
+    @property
+    def profile(self) -> ModelProfile:
+        return PROFILES[self.model]
+
+    # -- per-iteration time model ------------------------------------------
+    def compute_time(self) -> float:
+        p = self.profile
+        return p.compute_ref * self.batch_size / p.batch_ref
+
+    def comm_bytes(self) -> Tuple[float, float]:
+        """(ring-equivalent allreduce bytes per GPU, alltoall bytes per GPU)."""
+        p = self.profile
+        n = self.num_gpus
+        ar = 2.0 * p.param_bytes * (n - 1) / n if n > 1 else 0.0
+        a2a = p.alltoall_bytes * (n - 1) / n if n > 1 else 0.0
+        return ar, a2a
+
+    def iter_time(self, share: float, link_gbps: float = 100.0) -> float:
+        """Iteration latency at a given max-min fair bandwidth share."""
+        c = self.compute_time()
+        if self.num_gpus == 1:
+            return c
+        bw = link_gbps * GBPS * max(share, 1e-9)
+        ar, a2a = self.comm_bytes()
+        t_ar = ar / bw
+        t_a2a = a2a / bw
+        uncovered_ar = max(0.0, t_ar - self.profile.overlap_beta * c)
+        return c + uncovered_ar + t_a2a
+
+    def ideal_runtime(self, link_gbps: float = 100.0) -> float:
+        return self.num_iters * self.iter_time(1.0, link_gbps)
+
+    # -- traffic -------------------------------------------------------------
+    def phases(self, ranks: Sequence[int]) -> List[Tuple[str, Phase]]:
+        """Representative concurrent phases over physical GPU ids ``ranks``,
+        tagged ("ar" | "a2a").  Phase flow sizes carry the *total* bytes the
+        flow moves across the whole collective so one representative phase
+        stands for all identical rounds (ring) while multi-step collectives
+        (HD, AlltoAll) keep one phase per distinct pattern."""
+        ar, a2a = self.comm_bytes()
+        p = self.profile
+        out: List[Tuple[str, Phase]] = []
+        if len(ranks) < 2:
+            return out
+        n = len(ranks)
+        if ar > 0:
+            if self.allreduce_algo == "hd":
+                # per-phase halving sizes; Σ phase bytes ≈ ar (same volume)
+                out.extend(("ar", ph) for ph in
+                           traffic.halving_doubling_allreduce(ranks, p.param_bytes))
+            elif self.allreduce_algo == "hierarchical_ring":
+                # intra-server rings ride NVLink (local, dropped from fabric
+                # accounting); the leader ring carries the full gradient.
+                group = 8
+                leaders = [ranks[i] for i in range(0, n, group)] \
+                    if n > group and n % group == 0 else list(ranks)
+                m = len(leaders)
+                out.append(("ar", [Flow(leaders[i], leaders[(i + 1) % m],
+                                        2.0 * p.param_bytes * (m - 1) / max(m, 1))
+                                   for i in range(m)] if m > 1 else []))
+            else:
+                # all 2(n-1) ring rounds share one pattern — collapse into a
+                # single phase whose per-flow bytes are the whole AR volume
+                out.append(("ar", [Flow(ranks[i], ranks[(i + 1) % n], ar)
+                                   for i in range(n)]))
+        if a2a > 0:
+            out.extend(("a2a", ph) for ph in
+                       traffic.pairwise_alltoall(ranks, p.alltoall_bytes))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Dataset generators
+# ---------------------------------------------------------------------------
+
+def _choice(rng: np.random.Generator, items, probs):
+    return items[rng.choice(len(items), p=np.asarray(probs) / np.sum(probs))]
+
+
+def testbed_dataset(num_jobs: int = 100, seed: int = 0,
+                    mean_interarrival: float = 15.0) -> List[Job]:
+    """§8.1 testbed set: 100 jobs, N ∈ {2,4,8,16}, Table-3 batches,
+    duration scale tuned so Avg.JRT lands in the paper's 70-100 s band and
+    the queue stays loaded (Table 4's JWT regime)."""
+    rng = np.random.default_rng(seed)
+    models = list(PROFILES)
+    jobs: List[Job] = []
+    t = 0.0
+    for i in range(num_jobs):
+        model = models[rng.integers(len(models))]
+        n = int(_choice(rng, [2, 4, 8, 16], [0.3, 0.3, 0.25, 0.15]))
+        batch = int(BATCHES[model][rng.integers(len(BATCHES[model]))])
+        algo = ["ring", "hierarchical_ring", "hd"][rng.integers(3)]
+        iters = int(rng.lognormal(mean=5.8, sigma=0.5))
+        t += rng.exponential(mean_interarrival)
+        jobs.append(Job(i, model, n, batch, t, max(iters, 40),
+                        allreduce_algo=algo))
+    return jobs
+
+
+HELIOS_SIZE_MIX: List[Tuple[int, float]] = [
+    (1, 0.22), (2, 0.14), (4, 0.14), (8, 0.16),
+    (16, 0.12), (32, 0.09), (64, 0.06), (96, 0.03),
+    (128, 0.02), (160, 0.015), (256, 0.005),
+]
+
+TPUV4_SIZE_MIX: List[Tuple[int, float]] = [
+    (32, 0.18), (64, 0.27), (128, 0.27), (256, 0.19), (512, 0.09),
+]
+
+
+def cluster_dataset(num_jobs: int = 5000, lam: float = 120.0, seed: int = 0,
+                    size_mix: Optional[List[Tuple[int, float]]] = None,
+                    max_gpus: Optional[int] = None,
+                    with_deadlines: bool = False) -> List[Job]:
+    """Helios-derived mix (§9.2): Poisson arrivals with mean gap ``lam``."""
+    rng = np.random.default_rng(seed)
+    mix = size_mix or HELIOS_SIZE_MIX
+    sizes = [s for s, _ in mix]
+    probs = [p for _, p in mix]
+    models = list(PROFILES)
+    jobs: List[Job] = []
+    t = 0.0
+    for i in range(num_jobs):
+        n = int(_choice(rng, sizes, probs))
+        if max_gpus:
+            n = min(n, max_gpus)
+        model = models[rng.integers(len(models))]
+        batch = int(BATCHES[model][rng.integers(len(BATCHES[model]))])
+        algo = ["ring", "hierarchical_ring", "hd"][rng.integers(3)]
+        # Helios-like heavy-tailed durations tuned so the offered load at the
+        # paper's λ=120s sits just below saturation for `best` (ρ≈0.9) — the
+        # regime where ECMP's contention slowdown tips the queue over (§9.4)
+        iters = int(rng.lognormal(mean=8.8, sigma=1.1))
+        t += rng.exponential(lam)
+        job = Job(i, model, n, batch, t, max(iters, 50), allreduce_algo=algo)
+        if with_deadlines:
+            job.deadline = t + job.ideal_runtime() * float(rng.uniform(1.5, 4.0))
+        jobs.append(job)
+    return jobs

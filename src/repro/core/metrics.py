@@ -1,0 +1,49 @@
+"""Cluster performance metrics (paper §9.3): JRT, JWT, JCT, Stability."""
+
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .jobs import Job
+
+
+@dataclass
+class MetricsReport:
+    avg_jrt: float
+    avg_jwt: float
+    avg_jct: float
+    stability: float            # mean over groups of std(JCT) — lower is better
+    p99_jwt: float
+    n_finished: int
+    frag_gpu: int = 0           # jobs blocked by GPU shortage (Table 2)
+    frag_network: int = 0       # jobs blocked by network fragmentation
+
+    def row(self) -> Dict[str, float]:
+        return {
+            "avg_jrt": self.avg_jrt, "avg_jwt": self.avg_jwt,
+            "avg_jct": self.avg_jct, "stability": self.stability,
+            "p99_jwt": self.p99_jwt, "n": self.n_finished,
+            "frag_gpu": self.frag_gpu, "frag_network": self.frag_network,
+        }
+
+
+def job_metrics(jobs: Sequence[Job]) -> MetricsReport:
+    done = [j for j in jobs if j.finish_time is not None]
+    if not done:
+        return MetricsReport(0, 0, 0, 0, 0, 0)
+    jrt = np.array([j.finish_time - j.start_time for j in done])
+    jwt = np.array([j.start_time - j.arrival for j in done])
+    jct = jrt + jwt
+    groups: Dict[tuple, List[float]] = defaultdict(list)
+    for j, c in zip(done, jct):
+        groups[(j.model, j.num_gpus, j.batch_size)].append(float(c))
+    stds = [float(np.std(v)) for v in groups.values() if len(v) >= 2]
+    return MetricsReport(
+        avg_jrt=float(jrt.mean()), avg_jwt=float(jwt.mean()),
+        avg_jct=float(jct.mean()),
+        stability=float(np.mean(stds)) if stds else 0.0,
+        p99_jwt=float(np.percentile(jwt, 99)), n_finished=len(done))

@@ -1,0 +1,71 @@
+"""Leaf-wise Permutation Traffic Pattern (paper Definition 1) checker.
+
+A phase conforms iff:
+  1. it is a (partial) permutation on GPUs — every GPU sends at most one flow
+     and receives at most one flow;
+  2. the *cross-leaf* flows induce an injective relation on leafs: flows
+     leaving different source leafs never target the same destination leaf
+     (Definition 1's final sentence), and no flow's source leaf equals its
+     destination leaf by construction of "cross-leaf".
+
+Lemma 5.1: any source-routing strategy is contention-free for any phase
+passing this check.  This module is used by property tests and by the
+placement validator (a vClos certifies contention-freedom by checking the
+job's declared traffic phases against its virtual sub-topology).
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Set, Tuple
+
+from .topology import ClusterSpec
+from .traffic import Flow, Phase
+
+
+def is_permutation(phase: Phase) -> bool:
+    srcs = [f.src for f in phase]
+    dsts = [f.dst for f in phase]
+    return len(set(srcs)) == len(srcs) and len(set(dsts)) == len(dsts)
+
+
+def cross_leaf_flows(phase: Phase, spec: ClusterSpec) -> List[Flow]:
+    return [f for f in phase
+            if spec.leaf_of_gpu(f.src) != spec.leaf_of_gpu(f.dst)]
+
+
+def is_leafwise_permutation(phase: Phase, spec: ClusterSpec) -> bool:
+    """Definition 1 check for one concurrent phase."""
+    if not is_permutation(phase):
+        return False
+    seen: dict = {}  # dst_leaf -> src_leaf
+    for f in cross_leaf_flows(phase, spec):
+        j = spec.leaf_of_gpu(f.src)
+        k = spec.leaf_of_gpu(f.dst)
+        if k in seen and seen[k] != j:
+            return False  # two different source leafs target leaf k
+        seen[k] = j
+    return True
+
+
+def all_phases_leafwise(phases: Sequence[Phase], spec: ClusterSpec) -> bool:
+    return all(is_leafwise_permutation(p, spec) for p in phases)
+
+
+def violating_phases(phases: Sequence[Phase],
+                     spec: ClusterSpec) -> List[int]:
+    return [i for i, p in enumerate(phases)
+            if not is_leafwise_permutation(p, spec)]
+
+
+def leaf_traffic_matrix(phase: Phase, spec: ClusterSpec) -> List[List[int]]:
+    """#cross-leaf flows per (src_leaf, dst_leaf) — diagnostic for tests."""
+    mat = [[0] * spec.num_leafs for _ in range(spec.num_leafs)]
+    for f in cross_leaf_flows(phase, spec):
+        mat[spec.leaf_of_gpu(f.src)][spec.leaf_of_gpu(f.dst)] += 1
+    return mat
+
+
+def remap(phase: Phase, rank_to_gpu: Sequence[int]) -> Phase:
+    """Relabel a phase expressed over logical ranks onto physical GPUs."""
+    return [Flow(rank_to_gpu[f.src], rank_to_gpu[f.dst], f.nbytes)
+            for f in phase]

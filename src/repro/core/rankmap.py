@@ -1,0 +1,74 @@
+"""vClos → JAX mesh integration: contention-free logical rank ordering.
+
+On real hardware the order of devices handed to ``jax.sharding.Mesh``
+determines the ring order of ``all_reduce``/``all_gather`` (and the pairing
+of ``all_to_all``) on each mesh axis.  The paper's requirement (§5.3) is
+that collective rings be *leaf-contiguous*: rank i and rank i+1 on the same
+leaf except at block boundaries — then every phase of ring/HD allreduce is a
+Leaf-wise Permutation and Source Routing is contention-free (Lemma 5.1).
+
+``Placement.gpus`` is already emitted in leaf-block order by the vClos
+materializer, so the map is the identity *on purpose* — this module makes
+the contract explicit, verifies it, and maps it onto a JAX device list.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from .patterns import all_phases_leafwise, is_leafwise_permutation, remap
+from .placement import Placement
+from .topology import ClusterSpec
+from .traffic import pairwise_alltoall, ring_allreduce
+
+
+def leaf_contiguous_order(placement: Placement, spec: ClusterSpec) -> List[int]:
+    """Logical rank -> physical GPU, grouped by leaf then server then port.
+
+    Stable-sorts the placement's GPUs by (leaf, gpu) — a no-op for vClos
+    placements (already blocked) but repairs arbitrary GPU sets (e.g. the
+    relaxed/'best' strategies) into the contention-minimal order.
+    """
+    return sorted(placement.gpus, key=lambda g: (spec.leaf_of_gpu(g), g))
+
+
+def verify_ring_leafwise(order: Sequence[int], spec: ClusterSpec) -> bool:
+    """Ring allreduce over ``order`` must be Definition-1 conforming."""
+    phases = ring_allreduce(order, 1.0)
+    return all_phases_leafwise(phases[:1], spec)
+
+
+def mesh_device_order(placement: Placement, spec: ClusterSpec,
+                      devices: Optional[Sequence] = None) -> List:
+    """Permute ``devices`` (default ``jax.devices()``) so that flattening the
+    mesh in row-major order walks GPUs leaf-contiguously.
+
+    On the CPU dry-run container the devices are host-platform placeholders;
+    on a real cluster ``devices[i]`` is the accelerator whose host NIC is the
+    placement's GPU ``i``, and this order is what makes the compiled
+    collectives realise the scheduler-certified traffic pattern.
+    """
+    import jax
+    if devices is None:
+        devices = jax.devices()
+    order = leaf_contiguous_order(placement, spec)
+    gpu_to_rank = {g: r for r, g in enumerate(order)}
+    # devices are indexed by the placement's logical slot: slot i hosts
+    # placement.gpus[i]; emit them in leaf-contiguous rank order.
+    slots = {g: i for i, g in enumerate(placement.gpus)}
+    if len(devices) < len(order):
+        raise ValueError(f"need {len(order)} devices, have {len(devices)}")
+    return [devices[slots[g]] for g in order]
+
+
+def dp_axis_ring_flows(order: Sequence[int], spec: ClusterSpec):
+    """The DP-axis gradient ring the compiled program will emit, as flows —
+    used by tests to cross-check HLO-level neighbor pairs against the
+    scheduler's certified pattern."""
+    return ring_allreduce(order, 1.0)[0]
+
+
+def ep_axis_alltoall_flows(order: Sequence[int], spec: ClusterSpec):
+    return pairwise_alltoall(order, 1.0)

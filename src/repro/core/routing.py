@@ -1,0 +1,229 @@
+"""Routing strategies and per-link contention accounting (paper §5.2, §8.1).
+
+Routes are sequences of *directional* fabric links:
+
+  * intra-server flows traverse NVLink/ICI only (empty route — never contends)
+  * intra-leaf flows traverse the leaf switch only (non-blocking — empty route)
+  * inter-leaf flows traverse one uplink ``("up", leaf, spine, ch)`` and one
+    downlink ``("down", spine, leaf_dst, ch)``
+
+``SourceRouting`` implements the paper's static per-leaf map
+``f_m: server-port -> uplink`` (§5.2); ``ECMPRouting`` hashes a 5-tuple proxy
+(mmh3-style 64-bit mixer) per flow; ``BalancedECMPRouting`` picks the least
+loaded uplink at flow-start (the paper's "Balanced" baseline, §9.3);
+``IdealRouting`` models the single-big-switch ``Best`` upper bound.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .topology import ClusterSpec, Link
+from .traffic import Flow, Phase
+
+
+# ---------------------------------------------------------------------------
+# hashing (ECMP)
+# ---------------------------------------------------------------------------
+
+def _mix64(x: int) -> int:
+    """mmh3/splitmix-style 64-bit finalizer — stands in for the switch's
+    undisclosed hash (§8.1 chooses mmh3 over the 5-tuple)."""
+    x &= (1 << 64) - 1
+    x ^= x >> 33
+    x = (x * 0xFF51AFD7ED558CCD) & ((1 << 64) - 1)
+    x ^= x >> 33
+    x = (x * 0xC4CEB9FE1A85EC53) & ((1 << 64) - 1)
+    x ^= x >> 33
+    return x
+
+
+def ecmp_hash(src: int, dst: int, flow_id: int, seed: int, nway: int) -> int:
+    """Hash of the flow 5-tuple proxy (src-ip, dst-ip, ports ~ flow_id)."""
+    h = _mix64((src << 40) ^ (dst << 18) ^ (flow_id << 1) ^ _mix64(seed))
+    return h % nway
+
+
+# ---------------------------------------------------------------------------
+# Routing policies
+# ---------------------------------------------------------------------------
+
+class Routing:
+    """Base: maps a flow to its directional fabric links."""
+
+    def __init__(self, spec: ClusterSpec):
+        self.spec = spec
+
+    def route(self, flow: Flow, flow_id: int = 0) -> List[Link]:
+        raise NotImplementedError
+
+    def route_phase(self, phase: Phase) -> List[List[Link]]:
+        return [self.route(f, i) for i, f in enumerate(phase)]
+
+    # -- shared helpers -----------------------------------------------------
+    def _is_local(self, flow: Flow) -> bool:
+        s = self.spec
+        return (s.server_of_gpu(flow.src) == s.server_of_gpu(flow.dst)
+                or s.leaf_of_gpu(flow.src) == s.leaf_of_gpu(flow.dst))
+
+    def _downlink(self, spine: int, leaf_dst: int, ch: int = 0) -> Link:
+        return ("down", spine, leaf_dst, ch)
+
+    def _uplink(self, leaf: int, spine: int, ch: int = 0) -> Link:
+        return ("up", leaf, spine, ch)
+
+
+class IdealRouting(Routing):
+    """`Best` baseline: one giant non-blocking switch — nothing contends."""
+
+    def route(self, flow: Flow, flow_id: int = 0) -> List[Link]:
+        return []
+
+
+class SourceRouting(Routing):
+    """Paper §5.2: per-leaf bijection from server-facing ports to uplinks.
+
+    ``maps[n][i]`` gives the (spine, channel) uplink for server-port ``i`` of
+    leaf ``n``.  The default map is the identity ``i -> spine i mod S`` which
+    is the paper's canonical choice; vClos placements install job-specific
+    maps over their reserved links (see placement.py).
+    """
+
+    def __init__(self, spec: ClusterSpec,
+                 maps: Optional[Dict[int, Dict[int, Tuple[int, int]]]] = None):
+        super().__init__(spec)
+        if maps is None:
+            maps = {}
+            for n in range(spec.num_leafs):
+                maps[n] = {}
+                for i in range(spec.gpus_per_leaf):
+                    up = i * spec.channels  # first channel of port i's column
+                    maps[n][i] = (up % spec.num_spines, up // spec.num_spines)
+        self.maps = maps
+
+    def route(self, flow: Flow, flow_id: int = 0) -> List[Link]:
+        if self._is_local(flow):
+            return []
+        s = self.spec
+        n = s.leaf_of_gpu(flow.src)
+        k = s.leaf_of_gpu(flow.dst)
+        port = s.port_of_gpu(flow.src)
+        spine, ch = self.maps[n][port]
+        return [self._uplink(n, spine, ch), self._downlink(spine, k, ch)]
+
+
+class ECMPRouting(Routing):
+    """Hash-based uplink selection — the hash-collision baseline (§3.1)."""
+
+    def __init__(self, spec: ClusterSpec, seed: int = 0):
+        super().__init__(spec)
+        self.seed = seed
+
+    def route(self, flow: Flow, flow_id: int = 0) -> List[Link]:
+        if self._is_local(flow):
+            return []
+        s = self.spec
+        n = s.leaf_of_gpu(flow.src)
+        k = s.leaf_of_gpu(flow.dst)
+        nway = s.uplinks_per_leaf          # hash across every physical uplink
+        up = ecmp_hash(flow.src, flow.dst, flow_id, self.seed, nway)
+        spine, ch = up % s.num_spines, up // s.num_spines
+        # downlink channel also hashed when redundant channels exist
+        nch = s.base_channels
+        dch = ecmp_hash(flow.dst, flow.src, flow_id, self.seed + 1,
+                        nch) if nch > 1 else 0
+        return [self._uplink(n, spine, ch), self._downlink(spine, k, dch)]
+
+
+class BalancedECMPRouting(Routing):
+    """Least-loaded uplink selection at flow start (§9.3 "Balanced").
+
+    Stateful: tracks the load each routed flow leaves on links, so later
+    flows avoid the loaded uplinks.  Downlink remains forced by destination.
+    """
+
+    def __init__(self, spec: ClusterSpec, seed: int = 0):
+        super().__init__(spec)
+        self.seed = seed
+        self.load: Counter = Counter()
+
+    def reset(self) -> None:
+        self.load.clear()
+
+    def route(self, flow: Flow, flow_id: int = 0) -> List[Link]:
+        if self._is_local(flow):
+            return []
+        s = self.spec
+        n = s.leaf_of_gpu(flow.src)
+        k = s.leaf_of_gpu(flow.dst)
+        best: Optional[Tuple[int, int, int]] = None  # (cost, spine, ch)
+        start = ecmp_hash(flow.src, flow.dst, flow_id, self.seed,
+                          s.uplinks_per_leaf)
+        nway = s.uplinks_per_leaf
+        for off in range(nway):
+            up = (start + off) % nway
+            spine, ch = up % s.num_spines, up // s.num_spines
+            cost = (self.load[self._uplink(n, spine, ch)]
+                    + self.load[self._downlink(spine, k, ch)])
+            if best is None or cost < best[0]:
+                best = (cost, spine, ch)
+        _, spine, ch = best  # type: ignore[misc]
+        links = [self._uplink(n, spine, ch), self._downlink(spine, k, ch)]
+        for l in links:
+            self.load[l] += 1
+        return links
+
+
+# ---------------------------------------------------------------------------
+# Contention accounting
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ContentionReport:
+    link_load: Dict[Link, int] = field(default_factory=dict)
+    per_flow_max: List[int] = field(default_factory=list)
+
+    @property
+    def max_load(self) -> int:
+        return max(self.link_load.values(), default=0)
+
+    @property
+    def contended_flows(self) -> int:
+        return sum(1 for m in self.per_flow_max if m > 1)
+
+    @property
+    def is_contention_free(self) -> bool:
+        return self.max_load <= 1
+
+
+def contention(phase: Phase, routing: Routing) -> ContentionReport:
+    """Per-link flow counts for one concurrent phase under ``routing``."""
+    routes = routing.route_phase(phase)
+    load: Counter = Counter()
+    for links in routes:
+        for l in links:
+            load[l] += 1
+    per_flow = [max((load[l] for l in links), default=0) for links in routes]
+    return ContentionReport(link_load=dict(load), per_flow_max=per_flow)
+
+
+def phase_contention_profile(phases: Sequence[Phase],
+                             routing: Routing) -> List[ContentionReport]:
+    reports = []
+    for p in phases:
+        if isinstance(routing, BalancedECMPRouting):
+            routing.reset()
+        reports.append(contention(p, routing))
+    return reports
+
+
+def contention_histogram(phase: Phase, routing: Routing) -> Dict[int, int]:
+    """#flows experiencing a given max link load (paper Fig. 2 statistic)."""
+    rep = contention(phase, routing)
+    hist: Counter = Counter()
+    for m in rep.per_flow_max:
+        if m >= 1:
+            hist[m] += 1
+    return dict(hist)

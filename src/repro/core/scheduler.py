@@ -1,0 +1,77 @@
+"""Online isolated scheduler — the launcher-facing API (paper Fig. 7).
+
+Wraps the placement engines behind one object that the training launcher
+(``repro.launch.train``) consults before building a mesh:
+
+    sched = IsolatedScheduler(CLUSTER512, strategy="ocs-vclos")
+    grant = sched.submit(job_id=0, num_gpus=64)
+    if grant is not None:
+        devices = mesh_device_order(grant.placement, sched.spec)
+        ...build jax mesh, train...
+        sched.release(0)
+
+Also hosts the admission-queue logic shared with the simulator.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from .ocs import ocs_release, ocs_vclos_place
+from .placement import (Placement, PlacementFailure, commit, release,
+                        vclos_place, _stage0_server, _stage1_leaf)
+from .routing import SourceRouting
+from .topology import ClusterSpec, FabricState
+
+
+@dataclass
+class Grant:
+    placement: Placement
+    routing: SourceRouting
+
+
+class IsolatedScheduler:
+    def __init__(self, spec: ClusterSpec, strategy: str = "vclos",
+                 ilp_time_limit: float = 5.0):
+        if strategy not in ("vclos", "ocs-vclos"):
+            raise ValueError("IsolatedScheduler serves isolated strategies; "
+                             "use ClusterSimulator for baselines")
+        self.spec = spec
+        self.strategy = strategy
+        self.ilp_time_limit = ilp_time_limit
+        self.state = FabricState(spec)
+        self.grants: Dict[int, Grant] = {}
+        self.last_failure: Optional[str] = None
+
+    def submit(self, job_id: int, num_gpus: int) -> Optional[Grant]:
+        if self.strategy == "ocs-vclos":
+            res = ocs_vclos_place(self.state, job_id, num_gpus)
+        else:
+            res = vclos_place(self.state, job_id, num_gpus,
+                              ilp_time_limit=self.ilp_time_limit)
+        if isinstance(res, PlacementFailure):
+            self.last_failure = res.reason
+            return None
+        commit(self.state, res)
+        base = SourceRouting(self.spec)
+        maps = dict(base.maps)
+        for leaf, rmap in res.routing_maps.items():
+            merged = dict(maps.get(leaf, {}))
+            merged.update(rmap)
+            maps[leaf] = merged
+        grant = Grant(placement=res, routing=SourceRouting(self.spec, maps=maps))
+        self.grants[job_id] = grant
+        return grant
+
+    def release(self, job_id: int) -> None:
+        grant = self.grants.pop(job_id, None)
+        if grant is None:
+            return
+        if grant.placement.xconn_ports:
+            ocs_release(self.state, grant.placement)
+        else:
+            release(self.state, job_id)
+
+    def utilization(self) -> float:
+        return 1.0 - self.state.num_free_gpus() / self.spec.num_gpus

@@ -1,0 +1,291 @@
+"""Event-driven flow-level cluster simulator (RapidNetSim-style, §9.1).
+
+A fluid-rate model: each running job progresses at
+``rate = iter_time(share=1) / iter_time(current shares)`` iterations per
+ideal-iteration; rates change only when the running set changes (arrival
+placement or completion), so the simulation advances event-to-event.
+
+Per-strategy behaviour:
+  * ``best``       — ideal single-switch: no fabric, share = 1 (upper bound)
+  * ``sr``         — source routing, locality-packed placement, no isolation
+  * ``ecmp``       — 5-tuple-hash routing (the contention baseline)
+  * ``balanced``   — least-loaded uplink choice at flow start
+  * ``vclos``      — exclusive virtual sub-Clos per job (link reservation)
+  * ``ocs-vclos``  — vClos + OCS rewiring of idle circuits
+  * ``ocs-relax``  — OCS-vClos with the locality constraint relaxed
+                      (Table 5's cautionary column)
+
+Queueing policies: ``fifo`` (strict head-of-line), ``ff`` (fewest-GPU
+first), ``edf`` (earliest deadline first) — §9.7.
+"""
+
+from __future__ import annotations
+
+import math
+from collections import Counter
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .jobs import GBPS, Job
+from .metrics import MetricsReport, job_metrics
+from .ocs import _collect_servers, ocs_release, ocs_vclos_place
+from .placement import (Placement, PlacementFailure, commit, release,
+                        vclos_place, _stage0_server, _stage1_leaf)
+from .routing import (BalancedECMPRouting, ECMPRouting, IdealRouting,
+                      Routing, SourceRouting)
+from .topology import ClusterSpec, FabricState
+from .traffic import Flow
+
+NVLINK_SPEEDUP = 12.0  # intra-server fabric vs one NIC (Tbps NVLink vs 100G)
+
+
+# ---------------------------------------------------------------------------
+# Running-job bookkeeping
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _RunningJob:
+    job: Job
+    placement: Placement
+    iters_left: float
+    iter_ideal: float
+    rate: float = 1.0                     # iterations per ideal-iteration-time
+    # phase structures: (kind, per_flow_bytes, [link lists], per-link counts)
+    phases: List[Tuple[str, float, List[list], Counter]] = field(default_factory=list)
+    union_links: Counter = field(default_factory=Counter)
+    intra_server: bool = False
+
+    def iter_effective(self, shares: List[float], link_gbps: float) -> float:
+        j = self.job
+        c = j.compute_time()
+        bw_mult = NVLINK_SPEEDUP if self.intra_server else 1.0
+        bw = link_gbps * GBPS * bw_mult
+        t_ar = t_a2a = 0.0
+        for (kind, nbytes, _, _), share in zip(self.phases, shares):
+            t = nbytes / (bw * max(share, 1e-9))
+            if kind == "a2a":
+                t_a2a += t
+            else:
+                t_ar += t
+        return c + max(0.0, t_ar - j.profile.overlap_beta * c) + t_a2a
+
+
+# ---------------------------------------------------------------------------
+# Simulator
+# ---------------------------------------------------------------------------
+
+class ClusterSimulator:
+    def __init__(self, spec: ClusterSpec, strategy: str = "vclos",
+                 scheduler: str = "fifo", seed: int = 0,
+                 ilp_time_limit: float = 2.0):
+        self.spec = spec
+        self.strategy = strategy
+        self.scheduler = scheduler
+        self.seed = seed
+        self.ilp_time_limit = ilp_time_limit
+        self.state = FabricState(spec)
+        self.routing = self._make_routing()
+        self.running: Dict[int, _RunningJob] = {}
+        self.queue: List[Job] = []
+        self.frag_reason: Dict[int, str] = {}   # job_id -> first blocking cause
+        self.now = 0.0
+
+    # -- strategy plumbing ---------------------------------------------------
+    def _make_routing(self) -> Routing:
+        if self.strategy == "best":
+            return IdealRouting(self.spec)
+        if self.strategy == "ecmp":
+            return ECMPRouting(self.spec, seed=self.seed)
+        if self.strategy == "balanced":
+            return BalancedECMPRouting(self.spec, seed=self.seed)
+        # sr / vclos / ocs-vclos / ocs-relax all route statically
+        return SourceRouting(self.spec)
+
+    def _isolated(self) -> bool:
+        return self.strategy in ("best", "vclos", "ocs-vclos")
+
+    def _place(self, job: Job):
+        jid, n = job.job_id, job.num_gpus
+        if self.strategy == "vclos":
+            return vclos_place(self.state, jid, n,
+                               ilp_time_limit=self.ilp_time_limit)
+        if self.strategy == "ocs-vclos":
+            return ocs_vclos_place(self.state, jid, n)
+        if self.strategy == "ocs-relax":
+            return self._place_relaxed(jid, n)
+        # best / sr / ecmp / balanced: locality-packed, no reservation
+        if n <= self.spec.gpus_per_server:
+            p = _stage0_server(self.state, jid, n)
+            return p if p else PlacementFailure("gpu")
+        p = _stage1_leaf(self.state, jid, n)
+        if p is not None:
+            return p
+        servers = _collect_servers(self.state,
+                                   math.ceil(n / self.spec.gpus_per_server))
+        if servers is None:
+            return PlacementFailure("gpu")
+        gpus = [g for sv in servers for g in self.spec.gpus_of_server(sv)][:n]
+        return Placement(jid, gpus, "multi-leaf")
+
+    def _place_relaxed(self, jid: int, n: int):
+        """Locality relaxed: grab any free GPUs, scattered (Table 5)."""
+        free = [g for g in range(self.spec.num_gpus) if self.state.gpu_free(g)]
+        if len(free) < n:
+            return PlacementFailure("gpu")
+        rng = np.random.default_rng(self.seed + jid)
+        gpus = sorted(rng.choice(len(free), size=n, replace=False).tolist())
+        return Placement(jid, [free[i] for i in gpus], "relaxed")
+
+    # -- flow/rate machinery ---------------------------------------------------
+    def _build_running(self, job: Job, placement: Placement) -> _RunningJob:
+        spec = self.spec
+        gpus = placement.gpus[:job.num_gpus]
+        intra = len({spec.server_of_gpu(g) for g in gpus}) == 1
+        rj = _RunningJob(job=job, placement=placement,
+                         iters_left=float(job.num_iters),
+                         iter_ideal=1.0, intra_server=intra)
+        routing = self.routing
+        if placement.routing_maps and isinstance(routing, SourceRouting):
+            # job-specific source maps over its reserved links
+            maps = dict(routing.maps)
+            for leaf, rmap in placement.routing_maps.items():
+                merged = dict(maps.get(leaf, {}))
+                merged.update(rmap)
+                maps[leaf] = merged
+            routing = SourceRouting(spec, maps=maps)
+        route_cache: Dict[Tuple[int, int], list] = {}
+        raw: List[Tuple[str, float, Counter]] = []
+        for kind, phase in job.phases(gpus):
+            counts: Counter = Counter()
+            nbytes = max((f.nbytes for f in phase), default=0.0)
+            for f in phase:
+                key = (f.src, f.dst)
+                if key not in route_cache:
+                    route_cache[key] = routing.route(f, flow_id=job.job_id)
+                for l in route_cache[key]:
+                    counts[l] += 1
+            raw.append((kind, nbytes, counts))
+        # collapse long AlltoAll phase chains (N-1 steps) into one aggregate
+        # phase: per-link worst-case load, total bytes — keeps the hash
+        # -collision contention signal at O(1) phases per job
+        a2a = [(k, b, c) for k, b, c in raw if k == "a2a"]
+        rest = [(k, b, c) for k, b, c in raw if k != "a2a"]
+        if len(a2a) > 8:
+            agg: Counter = Counter()
+            for _, _, c in a2a:
+                for l, cnt in c.items():
+                    agg[l] = max(agg[l], cnt)
+            a2a = [("a2a", sum(b for _, b, _ in a2a), agg)]
+        for kind, nbytes, counts in rest + a2a:
+            rj.phases.append((kind, nbytes, [], counts))
+            for l, c in counts.items():
+                rj.union_links[l] = max(rj.union_links[l], c)
+        rj.iter_ideal = rj.iter_effective([1.0] * len(rj.phases),
+                                          spec.link_gbps)
+        return rj
+
+    def _recompute_rates(self) -> None:
+        if self._isolated():
+            for rj in self.running.values():
+                rj.rate = 1.0
+            return
+        global_load: Counter = Counter()
+        for rj in self.running.values():
+            global_load.update(rj.union_links)
+        for rj in self.running.values():
+            shares = []
+            for kind, nbytes, _links, counts in rj.phases:
+                worst = 1
+                for l, cnt in counts.items():
+                    other = global_load[l] - rj.union_links.get(l, 0)
+                    worst = max(worst, other + cnt)
+                shares.append(1.0 / worst)
+            eff = rj.iter_effective(shares, self.spec.link_gbps)
+            rj.rate = rj.iter_ideal / eff if eff > 0 else 1.0
+        # ocs-relax keeps locality penalty implicit: scattered placement
+        # yields many cross-leaf flows, captured by the shares above.
+
+    # -- event loop ---------------------------------------------------------
+    def run(self, jobs: Sequence[Job],
+            max_time: float = float("inf")) -> MetricsReport:
+        jobs = sorted(jobs, key=lambda j: j.arrival)
+        arrivals = list(jobs)
+        ai = 0
+        self.now = 0.0
+        pending_finish: Dict[int, float] = {}
+
+        def try_schedule() -> bool:
+            changed = False
+            order = list(self.queue)
+            if self.scheduler == "ff":
+                order.sort(key=lambda j: j.num_gpus)
+            elif self.scheduler == "edf":
+                order.sort(key=lambda j: j.deadline if j.deadline is not None
+                           else j.arrival)
+            for job in order:
+                res = self._place(job)
+                if isinstance(res, PlacementFailure):
+                    self.frag_reason.setdefault(job.job_id, res.reason)
+                    if self.scheduler == "fifo":
+                        break  # strict head-of-line blocking
+                    continue
+                commit(self.state, res)
+                job.start_time = self.now
+                self.running[job.job_id] = self._build_running(job, res)
+                self.queue.remove(job)
+                changed = True
+            return changed
+
+        def advance(dt: float) -> None:
+            for rj in self.running.values():
+                rj.iters_left -= dt * rj.rate / rj.iter_ideal
+
+        while (ai < len(arrivals) or self.queue or self.running) \
+                and self.now < max_time:
+            next_arrival = arrivals[ai].arrival if ai < len(arrivals) else math.inf
+            next_finish, fin_id = math.inf, None
+            for jid, rj in self.running.items():
+                t = self.now + rj.iters_left * rj.iter_ideal / max(rj.rate, 1e-12)
+                if t < next_finish:
+                    next_finish, fin_id = t, jid
+            t_next = min(next_arrival, next_finish)
+            if t_next is math.inf:
+                break
+            advance(t_next - self.now)
+            self.now = t_next
+            if next_finish <= next_arrival and fin_id is not None:
+                rj = self.running.pop(fin_id)
+                rj.job.finish_time = self.now
+                if rj.placement.xconn_ports:
+                    ocs_release(self.state, rj.placement)
+                else:
+                    release(self.state, fin_id)
+                try_schedule()
+                self._recompute_rates()
+            else:
+                job = arrivals[ai]
+                ai += 1
+                self.queue.append(job)
+                if try_schedule():
+                    self._recompute_rates()
+        rep = job_metrics(jobs)
+        rep.frag_gpu = sum(1 for r in self.frag_reason.values() if r == "gpu")
+        rep.frag_network = sum(1 for r in self.frag_reason.values()
+                               if r == "network")
+        return rep
+
+
+def simulate(spec: ClusterSpec, jobs: Sequence[Job], strategy: str,
+             scheduler: str = "fifo", seed: int = 0,
+             ilp_time_limit: float = 2.0) -> MetricsReport:
+    sim = ClusterSimulator(spec, strategy=strategy, scheduler=scheduler,
+                           seed=seed, ilp_time_limit=ilp_time_limit)
+    # copy jobs so runs under different strategies don't contaminate each other
+    import copy
+    jobs2 = [copy.copy(j) for j in jobs]
+    for j in jobs2:
+        j.start_time = None
+        j.finish_time = None
+    return sim.run(jobs2)

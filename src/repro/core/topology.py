@@ -1,0 +1,321 @@
+"""Leaf-Spine (folded-Clos) fabric model with optional OCS layer.
+
+This is the physical substrate of the paper (Fig. 4): ``L`` leaf switches,
+``S`` spine switches, ``gpus_per_leaf`` server-facing ports per leaf (one NIC
+per GPU, as in EFLOPS), and a uniform bipartite graph between leafs and
+spines.  Each server hosts ``gpus_per_server`` GPUs connected internally by
+NVLink/ICI (contention-free by construction).
+
+Directional fabric links:
+  * uplink   ``(leaf n, spine m, channel c)`` — leaf-to-spine
+  * downlink ``(spine m, leaf n, channel c)`` — spine-to-leaf
+
+``vClos`` reserves (leaf, spine) channels exclusively per job; the OCS layer
+(``OCSLayer``) rewires *idle* leaf uplink ports to spine downlink ports,
+changing the effective capacity matrix ``C[n][m]`` (paper §7, Table 1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+Link = Tuple[str, int, int, int]  # ("up"|"down", leaf, spine, channel)
+
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    """Static description of a Leaf-Spine GPU cluster.
+
+    Defaults follow the paper's CLUSTER512: 64-port switches, 16 leafs with
+    32 server-facing + 32 spine-facing ports each, 32 spines, 8 GPUs/server.
+    """
+
+    num_leafs: int = 16
+    num_spines: int = 32
+    gpus_per_leaf: int = 32
+    gpus_per_server: int = 8
+    link_gbps: float = 100.0
+    # extra uplink channels per (leaf, spine) pair
+    channels: int = 1
+    # uplink multiplier — rECMP's "+50% leaf-spine links" uses 1.5 together
+    # with 1.5x num_spines (Table 4 "Redundance" baseline)
+    uplink_factor: float = 1.0
+    num_ocs: int = 0  # 0 → static electrical fabric
+
+    def __post_init__(self) -> None:
+        if self.gpus_per_leaf % self.gpus_per_server:
+            raise ValueError("gpus_per_leaf must be a multiple of gpus_per_server")
+        if self.uplinks_per_leaf % self.num_spines:
+            raise ValueError("uplinks must divide evenly across spines")
+        if self.num_ocs:
+            up = self.uplinks_per_leaf
+            down = self.downlinks_per_spine
+            if up % self.num_ocs or down % self.num_ocs:
+                raise ValueError("num_ocs must divide per-leaf uplinks and per-spine downlinks")
+
+    # -- derived sizes ---------------------------------------------------
+    @property
+    def num_gpus(self) -> int:
+        return self.num_leafs * self.gpus_per_leaf
+
+    @property
+    def num_servers(self) -> int:
+        return self.num_gpus // self.gpus_per_server
+
+    @property
+    def servers_per_leaf(self) -> int:
+        return self.gpus_per_leaf // self.gpus_per_server
+
+    @property
+    def uplinks_per_leaf(self) -> int:
+        return int(self.gpus_per_leaf * self.channels * self.uplink_factor)
+
+    @property
+    def downlinks_per_spine(self) -> int:
+        return self.num_leafs * self.uplinks_per_leaf // self.num_spines
+
+    @property
+    def base_channels(self) -> int:
+        """Links between every (leaf, spine) pair in the uniform wiring."""
+        return self.uplinks_per_leaf // self.num_spines
+
+    # -- id mapping --------------------------------------------------------
+    def leaf_of_gpu(self, gpu: int) -> int:
+        return gpu // self.gpus_per_leaf
+
+    def server_of_gpu(self, gpu: int) -> int:
+        return gpu // self.gpus_per_server
+
+    def leaf_of_server(self, server: int) -> int:
+        return server * self.gpus_per_server // self.gpus_per_leaf
+
+    def port_of_gpu(self, gpu: int) -> int:
+        """Server-facing port index of ``gpu`` on its leaf."""
+        return gpu % self.gpus_per_leaf
+
+    def gpus_of_server(self, server: int) -> List[int]:
+        t = self.gpus_per_server
+        return list(range(server * t, (server + 1) * t))
+
+    def servers_of_leaf(self, leaf: int) -> List[int]:
+        spl = self.servers_per_leaf
+        return list(range(leaf * spl, (leaf + 1) * spl))
+
+
+# Paper cluster presets -----------------------------------------------------
+CLUSTER512 = ClusterSpec(num_leafs=16, num_spines=32, gpus_per_leaf=32,
+                         gpus_per_server=8, num_ocs=0)
+CLUSTER512_OCS = dataclasses.replace(CLUSTER512, num_ocs=16)
+CLUSTER2048 = ClusterSpec(num_leafs=64, num_spines=32, gpus_per_leaf=32,
+                          gpus_per_server=8, num_ocs=0)
+CLUSTER2048_OCS = dataclasses.replace(CLUSTER2048, num_ocs=32)
+# Testbed (§8.1): 8 servers x 4 GPUs; the paper virtualises its four
+# CE8850 switches via VRF ("one Spine switch virtualized into four logical
+# Spine switches") — we model the resulting logical fabric: 4 leafs x 8
+# logical spines, 2 servers per leaf.
+TESTBED32 = ClusterSpec(num_leafs=4, num_spines=8, gpus_per_leaf=8,
+                        gpus_per_server=4, channels=1, num_ocs=0)
+
+
+@dataclass
+class OCSLayer:
+    """MEMS optical-circuit-switch layer between leafs and spines (§7).
+
+    OCS ``k`` owns leaf-side ports ``(n, j)`` for uplink indices
+    ``j ≡ k (mod K)`` and spine-side ports ``(m, i)`` for downlink indices
+    ``i ≡ k (mod K)``.  A *circuit* pairs one leaf-side port with one
+    spine-side port on the same OCS.  Only circuits whose link is idle may be
+    rewired (50 ms switch time ⇒ never touch live traffic).
+    """
+
+    spec: ClusterSpec
+    # circuits[k]: dict leaf_port -> spine_port, both local to OCS k
+    circuits: List[Dict[int, int]] = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        if not self.circuits:
+            self.circuits = [dict() for _ in range(self.spec.num_ocs)]
+            self._wire_uniform()
+
+    # Port bookkeeping: leaf-side port local id on OCS k enumerates
+    # (leaf, uplink j) pairs with j % K == k, ordered by (leaf, j).
+    def leaf_ports(self, k: int) -> List[Tuple[int, int]]:
+        s = self.spec
+        return [(n, j) for n in range(s.num_leafs)
+                for j in range(k, s.uplinks_per_leaf, s.num_ocs)]
+
+    def spine_ports(self, k: int) -> List[Tuple[int, int]]:
+        s = self.spec
+        return [(m, i) for m in range(s.num_spines)
+                for i in range(k, s.downlinks_per_spine, s.num_ocs)]
+
+    def _wire_uniform(self) -> None:
+        """Default wiring realising the uniform bipartite graph.
+
+        Latin-square assignment: uplink ``j`` of leaf ``n`` targets spine
+        ``(j + n) mod S``.  Per leaf this covers every spine ``U/S`` times
+        (uniform), and per OCS the targets form a perfect matching onto the
+        OCS's spine-side ports for the preset cluster shapes.
+        """
+        s = self.spec
+        for k in range(s.num_ocs):
+            lports = self.leaf_ports(k)
+            sports = self.spine_ports(k)
+            free = {m: [idx for idx, (mm, _) in enumerate(sports) if mm == m]
+                    for m in range(s.num_spines)}
+            for lp, (n, j) in enumerate(lports):
+                m = (j + n) % s.num_spines
+                if not free[m]:
+                    # fall back to any spine with a free port on this OCS
+                    m = next(mm for mm in range(s.num_spines) if free[mm])
+                self.circuits[k][lp] = free[m].pop(0)
+
+    def capacity(self) -> List[List[int]]:
+        """Effective link-count matrix C[n][m] induced by current circuits."""
+        s = self.spec
+        cap = [[0] * s.num_spines for _ in range(s.num_leafs)]
+        for k in range(s.num_ocs):
+            lports = self.leaf_ports(k)
+            sports = self.spine_ports(k)
+            for lp, sp in self.circuits[k].items():
+                n, _ = lports[lp]
+                m, _ = sports[sp]
+                cap[n][m] += 1
+        return cap
+
+
+@dataclass
+class FabricState:
+    """Mutable occupancy state of a cluster: GPUs, links, OCS circuits."""
+
+    spec: ClusterSpec
+    ocs: Optional[OCSLayer] = None
+    # gpu -> job_id (absent = free)
+    gpu_owner: Dict[int, int] = field(default_factory=dict)
+    # reserved channel counts per (leaf, spine) -> job_id -> count
+    link_owner: Dict[Tuple[int, int], Dict[int, int]] = field(default_factory=dict)
+    # OCS leaf ports held by live leaf↔leaf cross-connects: (ocs, port) -> job
+    xconn_owner: Dict[Tuple[int, int], int] = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        if self.spec.num_ocs and self.ocs is None:
+            self.ocs = OCSLayer(self.spec)
+
+    # -- capacity ----------------------------------------------------------
+    def capacity(self) -> List[List[int]]:
+        if self.ocs is not None:
+            return self.ocs.capacity()
+        s = self.spec
+        return [[s.base_channels] * s.num_spines for _ in range(s.num_leafs)]
+
+    def reserved(self, n: int, m: int) -> int:
+        return sum(self.link_owner.get((n, m), {}).values())
+
+    def free_channels(self, n: int, m: int, cap: Optional[List[List[int]]] = None) -> int:
+        c = (cap or self.capacity())[n][m]
+        return c - self.reserved(n, m)
+
+    def free_capacity(self) -> List[List[int]]:
+        cap = self.capacity()
+        s = self.spec
+        return [[cap[n][m] - self.reserved(n, m) for m in range(s.num_spines)]
+                for n in range(s.num_leafs)]
+
+    # -- GPU / server occupancy ---------------------------------------------
+    def gpu_free(self, gpu: int) -> bool:
+        return gpu not in self.gpu_owner
+
+    def idle_gpus_of_server(self, server: int) -> List[int]:
+        return [g for g in self.spec.gpus_of_server(server) if self.gpu_free(g)]
+
+    def server_idle(self, server: int) -> bool:
+        return all(self.gpu_free(g) for g in self.spec.gpus_of_server(server))
+
+    def idle_servers_of_leaf(self, leaf: int) -> List[int]:
+        return [sv for sv in self.spec.servers_of_leaf(leaf) if self.server_idle(sv)]
+
+    def num_free_gpus(self) -> int:
+        return self.spec.num_gpus - len(self.gpu_owner)
+
+    def spine_free_ports(self, m: int, cap: Optional[List[List[int]]] = None) -> int:
+        """RPN(S_m): unreserved downlink channels of spine m (paper eq. 6)."""
+        c = cap or self.capacity()
+        return sum(c[n][m] - self.reserved(n, m) for n in range(self.spec.num_leafs))
+
+    def leaf_free_uplinks(self, n: int, cap: Optional[List[List[int]]] = None) -> int:
+        c = cap or self.capacity()
+        return sum(c[n][m] - self.reserved(n, m) for m in range(self.spec.num_spines))
+
+    def leaf_free_ports_ocs(self, n: int) -> int:
+        """Rewirable uplink-port budget of leaf n under an OCS fabric:
+        physical ports − reserved channels − live xconn patches.  Unlike
+        :meth:`leaf_free_uplinks` this counts currently-unwired ports too —
+        the OCS can always wire them somewhere."""
+        if self.ocs is None:
+            return self.leaf_free_uplinks(n)
+        held = 0
+        for k in range(self.spec.num_ocs):
+            lports = self.ocs.leaf_ports(k)
+            held += sum(1 for (kk, lp) in self.xconn_owner
+                        if kk == k and lports[lp][0] == n)
+        reserved = sum(self.reserved(n, m) for m in range(self.spec.num_spines))
+        return self.spec.uplinks_per_leaf - reserved - held
+
+    # -- mutation ------------------------------------------------------------
+    def allocate_gpus(self, job_id: int, gpus: List[int]) -> None:
+        for g in gpus:
+            if not self.gpu_free(g):
+                raise ValueError(f"GPU {g} already owned by job {self.gpu_owner[g]}")
+            self.gpu_owner[g] = job_id
+
+    def reserve_links(self, job_id: int, links: Dict[Tuple[int, int], int]) -> None:
+        cap = self.capacity()
+        for (n, m), cnt in links.items():
+            if cnt <= 0:
+                continue
+            if self.free_channels(n, m, cap) < cnt:
+                raise ValueError(f"link ({n},{m}) over-reserved")
+            self.link_owner.setdefault((n, m), {})[job_id] = (
+                self.link_owner.get((n, m), {}).get(job_id, 0) + cnt)
+
+    def release_job(self, job_id: int) -> None:
+        self.gpu_owner = {g: j for g, j in self.gpu_owner.items() if j != job_id}
+        for key in list(self.link_owner):
+            self.link_owner[key].pop(job_id, None)
+            if not self.link_owner[key]:
+                del self.link_owner[key]
+
+    # -- OCS rewiring ----------------------------------------------------------
+    def rewire(self, moves: List[Tuple[int, int, int]]) -> None:
+        """Apply OCS circuit moves ``(ocs_k, leaf_port, new_spine_port)``.
+
+        Only idle circuits may move: a circuit is idle when the (leaf, spine)
+        channel it currently realises has spare (unreserved) capacity.
+        """
+        if self.ocs is None:
+            raise ValueError("no OCS layer on this fabric")
+        for k, lp, new_sp in moves:
+            lports = self.ocs.leaf_ports(k)
+            sports = self.ocs.spine_ports(k)
+            n, _ = lports[lp]
+            cap = self.capacity()
+            if lp in self.ocs.circuits[k]:
+                old_sp = self.ocs.circuits[k][lp]
+                m_old, _ = sports[old_sp]
+                if cap[n][m_old] - self.reserved(n, m_old) <= 0:
+                    raise ValueError(
+                        f"OCS {k}: circuit leaf-port {lp} carries reserved traffic")
+            if new_sp in self.ocs.circuits[k].values():
+                raise ValueError(f"OCS {k}: spine port {new_sp} already wired")
+            self.ocs.circuits[k][lp] = new_sp
+
+    def snapshot(self) -> "FabricState":
+        st = FabricState(self.spec, ocs=None)
+        st.gpu_owner = dict(self.gpu_owner)
+        st.link_owner = {k: dict(v) for k, v in self.link_owner.items()}
+        st.xconn_owner = dict(self.xconn_owner)
+        if self.ocs is not None:
+            st.ocs = OCSLayer(self.spec, circuits=[dict(c) for c in self.ocs.circuits])
+        return st

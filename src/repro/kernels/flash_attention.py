@@ -1,0 +1,132 @@
+"""Pallas TPU flash-attention forward kernel.
+
+Blocked online-softmax attention with explicit VMEM tiling:
+
+  grid = (batch·heads, num_q_blocks, num_kv_blocks)   — kv innermost
+  q tile   (1, block_q, head_dim)   VMEM
+  k/v tile (1, block_k, head_dim)   VMEM
+  out tile (1, block_q, head_dim)   VMEM, revisited across the kv dimension
+  scratch: acc (block_q, head_dim) f32, m/l (block_q, MIN_LANE) f32
+
+Block defaults (block_q = block_k = 512, head_dim 64–256) keep the working
+set ≤ ~2.5 MB — comfortably inside the ~16 MB VMEM of a TPU v5e core, with
+MXU-aligned (multiple-of-128) matmul dims.  Causal masking uses
+broadcasted iotas; fully-masked tiles are skipped with ``pl.when`` so they
+cost neither MXU cycles nor VMEM traffic.
+
+Validated on CPU via ``interpret=True`` against ``ref.reference_attention``
+(tests/test_kernels.py sweeps shapes, dtypes, causal/windowed variants).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+_LANE = 128  # TPU lane width: scratch vectors padded to (bq, _LANE)
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 sm_scale: float, block_q: int, block_k: int,
+                 causal: bool, window: Optional[int], seq_len: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q0 = qi * block_q
+    k0 = kj * block_k
+    # tile is live unless fully masked by causality/window
+    live = jnp.bool_(True)
+    if causal:
+        live = jnp.logical_and(live, k0 <= q0 + block_q - 1)
+    if window is not None:
+        live = jnp.logical_and(live, k0 + block_k > q0 - window + 1)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                    # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                    # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale                                    # (bq, bk)
+        qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = kpos < seq_len
+        if causal:
+            mask = jnp.logical_and(mask, qpos >= kpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, qpos - kpos < window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[:, 0]
+        l_prev = l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        l = l_ref[:, 0]
+        o_ref[0, ...] = (acc_ref[...]
+                         / jnp.maximum(l, 1e-20)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        block_q: int = 512, block_k: int = 512,
+                        interpret: bool = True) -> jnp.ndarray:
+    """q/k/v: (BH, S, hd) — multi-head flattened.  Returns (BH, S, hd)."""
+    bh, sq, hd = q.shape
+    _, skv, _ = k.shape
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    nq = math.ceil(sq / block_q)
+    nk = math.ceil(skv / block_k)
+    pad_q = nq * block_q - sq
+    pad_k = nk * block_k - skv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+    sm_scale = 1.0 / math.sqrt(hd)
+    kernel = functools.partial(
+        _attn_kernel, sm_scale=sm_scale, block_q=block_q, block_k=block_k,
+        causal=causal, window=window, seq_len=skv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, nq * block_q, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q, _LANE), jnp.float32),
+            pltpu.VMEM((block_q, _LANE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq]

@@ -1,0 +1,123 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``implementation="xla"`` routes to the pure-jnp blocked path (the dry-run /
+roofline default — Pallas custom-calls are opaque to ``cost_analysis``);
+``implementation="pallas"`` is the TPU perf path, executed on CPU in
+interpret mode for validation.
+
+Training gradients for the Pallas forward use recompute through the jnp
+oracle (``jax.custom_vjp``) — the standard flash-attention backward strategy
+(recompute beats storing S² probabilities), and on CPU it keeps tests exact.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.attention import blocked_attention, reference_attention
+from ..models.ssm import LOG_DECAY_MIN, chunked_linear_attention
+from .flash_attention import flash_attention_fwd
+from .rwkv6 import rwkv6_chunked_fwd
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _bshd_to_flat(x):
+    b, s, h, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+
+
+def _flat_to_bshd(x, b, h):
+    bh, s, d = x.shape
+    return x.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal=True, window=None,
+                    block_q=512, block_k=512):
+    """q/k/v: (B, S, H|Hkv, hd) GQA-aware.  Pallas forward, recompute VJP."""
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    if hkv != hq:  # GQA: repeat KV heads for the flat MHA kernel
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    out = flash_attention_fwd(_bshd_to_flat(q), _bshd_to_flat(k),
+                              _bshd_to_flat(v), causal=causal, window=window,
+                              block_q=block_q, block_k=block_k)
+    return _flat_to_bshd(out, b, hq)
+
+
+def _fa_fwd(q, k, v, causal, window, block_q, block_k):
+    return flash_attention(q, k, v, causal, window, block_q, block_k), \
+        (q, k, v)
+
+
+def _fa_bwd(causal, window, block_q, block_k, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: blocked_attention(
+            q_, k_, v_, causal=causal, window=window,
+            block_q=block_q, block_k=block_k), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+def attention(q, k, v, *, causal=True, window=None,
+              implementation: str = "xla", block_q=512, block_k=512):
+    if implementation == "pallas":
+        return flash_attention(q, k, v, causal, window, block_q, block_k)
+    return blocked_attention(q, k, v, causal=causal, window=window,
+                             block_q=block_q, block_k=block_k)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 / mamba2 chunked recurrence
+# ---------------------------------------------------------------------------
+
+def rwkv6_mix(q, k, v, log_decay, *, bonus=None, chunk: int = 64,
+              implementation: str = "xla") -> jnp.ndarray:
+    """q/k/v: (B, H, T, K/V); log_decay (B, H, T, K) ≤ 0; bonus (H, K)|None.
+
+    Pallas path precomputes the decay scalings in XLA (elementwise) and runs
+    the matmul-heavy chunk recurrence in the kernel.
+    """
+    if implementation != "pallas":
+        out, _ = chunked_linear_attention(q, k, v, log_decay, bonus=bonus,
+                                          chunk=chunk)
+        return out
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    nc = t // chunk
+    ld = jnp.clip(log_decay.astype(jnp.float32), LOG_DECAY_MIN, 0.0)
+    ldc = ld.reshape(b, h, nc, chunk, dk)
+    L = jnp.cumsum(ldc, axis=3)
+    Lc = L[:, :, :, -1:, :]
+    exclusive = bonus is not None
+    L_read = (L - ldc) if exclusive else L
+    center = 0.5 * (L_read.max(axis=3, keepdims=True)
+                    + L.min(axis=3, keepdims=True))
+    qf = q.astype(jnp.float32).reshape(b, h, nc, chunk, dk)
+    kf = k.astype(jnp.float32).reshape(b, h, nc, chunk, dk)
+    q_in = (qf * jnp.exp(L_read)).reshape(b * h, t, dk)
+    q_intra = (qf * jnp.exp(L_read - center)).reshape(b * h, t, dk)
+    k_intra = (kf * jnp.exp(center - L)).reshape(b * h, t, dk)
+    k_out = (kf * jnp.exp(Lc - L)).reshape(b * h, t, dk)
+    decay = jnp.exp(Lc).reshape(b * h, nc, dk)
+    vv = v.astype(jnp.float32).reshape(b * h, t, dv)
+    out = rwkv6_chunked_fwd(q_in, q_intra, k_intra, k_out, vv, decay,
+                            chunk=chunk, exclusive=exclusive)
+    out = out.reshape(b, h, t, dv)
+    if bonus is not None:
+        diag = jnp.einsum("bhtk,hk,bhtk->bht", q.astype(jnp.float32),
+                          bonus.astype(jnp.float32), k.astype(jnp.float32))
+        out = out + diag[..., None] * v.astype(jnp.float32)
+    return out.astype(q.dtype)

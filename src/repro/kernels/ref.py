@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.attention import reference_attention
+from ..models.ssm import (chunked_linear_attention, linear_attention_reference)
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None) -> jnp.ndarray:
+    """q/k/v: (B, S, H, hd) — full softmax attention (O(S²) memory)."""
+    return reference_attention(q, k, v, causal=causal, window=window)
+
+
+def rwkv6_ref(q, k, v, log_decay, bonus=None,
+              initial_state=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """q/k/v: (B, H, T, K/V) — sequential token-by-token recurrence."""
+    return linear_attention_reference(q, k, v, log_decay, bonus=bonus,
+                                      initial_state=initial_state)
+
+
+def rwkv6_chunked_jnp(q, k, v, log_decay, bonus=None, chunk: int = 16):
+    """The pure-jnp chunked formulation (models/ssm.py) — used to isolate
+    kernel bugs from chunking-math bugs."""
+    return chunked_linear_attention(q, k, v, log_decay, bonus=bonus,
+                                    chunk=chunk)

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel for the RWKV6/Mamba2 chunked linear recurrence.
+
+The hot loop of the attention-free archs: per (batch·head), chunks of length
+C update a (K, V) state matrix and produce outputs
+
+    o_chunk = q_in · S  +  tril(q_intra · k_intraᵀ) · v
+    S      ← diag(exp(Lc)) · S  +  k_outᵀ · v
+
+The decay scalings (q_in, k_intra, q_intra, k_out, exp(Lc)) are cheap
+element-wise precomputations done in XLA by ``ops.rwkv6_mix``; the kernel
+owns the matmul-heavy part and carries S in VMEM scratch across the chunk
+grid dimension (grid iterates chunks innermost, so the carry is sound).
+
+  grid = (batch·heads, num_chunks)
+  tiles: q_in/q_intra/k_intra/k_out (1, C, K), v (1, C, V), decay (1, 1, K)
+  scratch: S (K, V) f32 — for K=V=64 that is 16 KB, trivially VMEM-resident;
+  C=128 keeps every matmul MXU-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rwkv_kernel(q_in_ref, q_intra_ref, k_intra_ref, k_out_ref, v_ref,
+                 decay_ref, o_ref, s_ref, *, chunk: int, exclusive: bool):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    q_in = q_in_ref[0].astype(jnp.float32)        # (C, K)
+    q_intra = q_intra_ref[0].astype(jnp.float32)  # (C, K)
+    k_intra = k_intra_ref[0].astype(jnp.float32)  # (C, K)
+    k_out = k_out_ref[0].astype(jnp.float32)      # (C, K)
+    v = v_ref[0].astype(jnp.float32)              # (C, V)
+    decay = decay_ref[0, 0].astype(jnp.float32)   # (K,)
+    S = s_ref[...]                                # (K, V)
+
+    # cross-chunk read
+    o_cross = jax.lax.dot_general(q_in, S, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    # intra-chunk: masked pairwise scores
+    scores = jax.lax.dot_general(q_intra, k_intra, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    r = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    c = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    mask = (r > c) if exclusive else (r >= c)
+    scores = jnp.where(mask, scores, 0.0)
+    o_intra = jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    o_ref[0, ...] = (o_cross + o_intra).astype(o_ref.dtype)
+    # state update
+    s_ref[...] = decay[:, None] * S + jax.lax.dot_general(
+        k_out, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def rwkv6_chunked_fwd(q_in, q_intra, k_intra, k_out, v, decay, *,
+                      chunk: int, exclusive: bool = True,
+                      interpret: bool = True) -> jnp.ndarray:
+    """All inputs (BH, T, K/V) pre-scaled; decay (BH, T//chunk, K) per-chunk
+    total decay exp(Lc).  Returns o (BH, T, V) (diagonal/bonus term added by
+    the wrapper)."""
+    bh, t, dk = q_in.shape
+    dv = v.shape[-1]
+    assert t % chunk == 0
+    nc = t // chunk
+    kernel = functools.partial(_rwkv_kernel, chunk=chunk, exclusive=exclusive)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, 1, dk), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dv), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, dv), q_in.dtype),
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(q_in, q_intra, k_intra, k_out, v, decay)

@@ -1,0 +1,489 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell:
+  1. build the production mesh (16×16 single-pod / 2×16×16 multi-pod)
+  2. derive the arch's mesh view + sharding rules (parallel/sharding.py)
+  3. jit the train_step (train shapes) or serve_step (decode shapes) with
+     explicit in/out shardings and ``.lower().compile()`` it against
+     ShapeDtypeStruct inputs — no allocation
+  4. record memory_analysis / cost_analysis / parsed collective bytes into
+     artifacts/dryrun/<cell>.json for the roofline reporter
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+      --shape train_4k --mesh pod            # one cell
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, get_config, list_configs
+from ..models.context import ModelContext
+from ..parallel.sharding import (abstract_params, input_shardings,
+                                 input_specs, make_context, mesh_view,
+                                 param_shardings, param_spec)
+from ..serve.kv_cache import attn_cache_len
+from ..train.optimizer import OptimizerConfig, adamw_init
+from ..train.train_step import make_train_step
+from .hlo_analysis import (Roofline, cost_summary, memory_summary,
+                           parse_collectives)
+from .mesh import make_production_mesh
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+# long_500k is only runnable on sub-quadratic archs (DESIGN.md §5)
+def cell_supported(cfg, shape_name: str) -> Optional[str]:
+    if shape_name == "long_500k" and not get_config(cfg.name).sub_quadratic:
+        return ("full-attention arch: 500k-token KV cache/score matrix is "
+                "unbounded — skipped per DESIGN.md §5")
+    return None
+
+
+def default_microbatches(cfg, shape_cfg, dp: int) -> int:
+    """Grad-accumulation factor.  Fewer/larger microbatches amortise the
+    per-micro FSDP gathers and gradient reductions (§Perf iteration 2:
+    per-token wire bytes halve when the microbatch grows 8x), so we only
+    accumulate as much as HBM requires."""
+    per_dp = max(shape_cfg.global_batch // dp, 1)
+    if cfg.param_count() > 100e9 or shape_cfg.seq_len > 8192:
+        return per_dp          # memory-bound: microbatch of 1 per DP shard
+    return max(per_dp // 8, 1)
+
+
+def default_run_overrides(cfg) -> Dict[str, Any]:
+    """Per-arch execution defaults (§Perf iterations 2b/3):
+    * 100B+ archs: full remat (memory headroom);
+    * ssm/hybrid: full remat — `dots` pins every small dot in the chunked
+      recurrence and *increases* HBM traffic (measured 7.3→13.6 s on rwkv6,
+      hypothesis refuted in EXPERIMENTS.md §Perf);
+    * other dense/moe: `dots` (fewer weight re-reads in the backward)."""
+    big = cfg.param_count() > 100e9
+    if big or cfg.family in ("ssm", "hybrid"):
+        return {"remat": "full"}
+    return {"remat": "dots"}
+
+
+# ---------------------------------------------------------------------------
+# FSDP augmentation of parameter specs
+# ---------------------------------------------------------------------------
+
+def _fsdp_spec(spec: P, leaf, view, stacked_hint: bool) -> P:
+    """Insert the "data" (FSDP) axis into the first unsharded dim that
+    divides evenly — ZeRO-3-style weight sharding on top of TP."""
+    data = view.shape.get("data", 1)
+    if data <= 1 or leaf.ndim == 0 or leaf.size < (1 << 16):
+        return spec
+    entries = list(spec) + [None] * (leaf.ndim - len(spec))
+    start = 1 if stacked_hint and leaf.ndim >= 2 else 0
+    for d in range(start, leaf.ndim):
+        if entries[d] is None and leaf.shape[d] % data == 0:
+            entries[d] = "data"
+            return P(*entries)
+    return spec
+
+
+def sharded_param_specs(params_abs, cfg, view, fsdp: bool = True):
+    from ..parallel.sharding import _STACKED, _path_str, sanitize_spec
+
+    def one(path, leaf):
+        spec = sanitize_spec(param_spec(path, leaf, cfg), leaf, view)
+        if fsdp:
+            stacked = bool(_STACKED.search(_path_str(path)))
+            spec = _fsdp_spec(spec, leaf, view, stacked)
+        return NamedSharding(view, spec)
+    return jax.tree_util.tree_map_with_path(one, params_abs)
+
+
+# ---------------------------------------------------------------------------
+# decode-state specs
+# ---------------------------------------------------------------------------
+
+def decode_state_specs(cfg, shape_cfg, view) -> Dict[str, Any]:
+    """(ShapeDtypeStructs, NamedShardings) for the serve-side state."""
+    from ..serve.kv_cache import init_decode_state
+    b, s = shape_cfg.global_batch, shape_cfg.seq_len
+    state = jax.eval_shape(
+        lambda: init_decode_state(cfg, b, s, dtype=jnp.bfloat16))
+    dp = tuple(n for n in view.axis_names if n in ("pod", "data"))
+    dp_axes = dp if len(dp) > 1 else dp[0]
+    dp_size = int(np.prod([view.shape[n] for n in dp]))
+    bshard = dp_axes if b % dp_size == 0 else None
+    tp = ("a", "b")
+    tp_size = view.shape["a"] * view.shape["b"]
+
+    def spec_for(name: str, leaf) -> P:
+        if leaf.ndim == 0:
+            return P()
+        if name in ("k_cache", "v_cache", "k_cache_dense", "v_cache_dense",
+                    "cross_k", "cross_v"):
+            # (L, B, cap, Hkv, hd): batch over dp, cache seq over tp
+            cap = leaf.shape[2]
+            seq_spec = tp if cap % tp_size == 0 else None
+            return P(None, bshard, seq_spec, None, None)
+        if name == "rwkv_S":            # (L, B, H, K, V): heads over "a"
+            h = leaf.shape[2]
+            return P(None, bshard, "a" if h % view.shape["a"] == 0 else None,
+                     None, None)
+        if name == "mamba_ssm":
+            h = leaf.shape[2]
+            return P(None, bshard, "a" if h % view.shape["a"] == 0 else None,
+                     None, None)
+        if name in ("tmix_last", "cmix_last"):
+            return P(None, bshard, tp)
+        if name == "mamba_conv":        # (L, B, 3, D_in)
+            return P(None, bshard, None,
+                     tp if leaf.shape[3] % tp_size == 0 else None)
+        return P(*([None] * leaf.ndim))
+
+    shardings = {k: NamedSharding(view, spec_for(k, v))
+                 for k, v in state.items()}
+    return state, shardings
+
+
+# ---------------------------------------------------------------------------
+# roofline extrapolation
+#
+# XLA's cost_analysis counts a `while` body ONCE (verified empirically), so
+# the scanned production program under-reports FLOPs/bytes/collectives.  We
+# therefore compile small FULLY-UNROLLED variants at two depths (and two
+# grad-accumulation factors) and extrapolate linearly — exact, because every
+# scan in this codebase is linear in its trip count:
+#     total(L, mb) = opt + mb · [loss(L_a) + (L − L_a) · per_layer]
+# ---------------------------------------------------------------------------
+
+import dataclasses as _dc
+
+
+def _aux_depths(cfg) -> Tuple[int, int]:
+    if cfg.family == "hybrid":
+        return cfg.attn_every, 2 * cfg.attn_every
+    if cfg.family == "moe" and cfg.moe_first_dense:
+        return cfg.moe_first_dense + 1, cfg.moe_first_dense + 2
+    return 1, 2
+
+
+def _small_cfg(cfg, L: int):
+    kw: Dict[str, Any] = {"num_layers": L}
+    if cfg.is_encoder_decoder:
+        kw["encoder_layers"] = L
+    return _dc.replace(cfg, **kw)
+
+
+def _aux_ctx(ctx, shape_cfg):
+    seq = shape_cfg.seq_len
+    blk = max(1024, seq // 8)
+    # keep the production ssm chunk when it unrolls to ≤16 scan trips;
+    # otherwise grow it (conservative FLOP overcount on ssm prefill cells —
+    # the 32-trip variant took >20 min to compile for zamba2)
+    chunk = ctx.ssm_chunk if seq // max(ctx.ssm_chunk, 1) <= 16 \
+        else max(ctx.ssm_chunk, seq // 16)
+    if shape_cfg.mode == "decode":
+        chunk = ctx.ssm_chunk
+    return _dc.replace(ctx, full_unroll=True, block_q=blk, block_k=blk,
+                       ssm_chunk=chunk)
+
+
+def _measure(cfg_s, shape_cfg, mesh, run_cfg, mode: str,
+             mb_aux: int, batch_override: int) -> Dict[str, float]:
+    """Compile one unrolled aux variant; return per-device cost terms."""
+    ctx = _aux_ctx(make_context(mesh, cfg_s, run_cfg), shape_cfg)
+    view = ctx.mesh
+    shape_aux = _dc.replace(shape_cfg, global_batch=batch_override)
+    params_abs = abstract_params(cfg_s, dtype=jnp.bfloat16)
+    pshard = sharded_param_specs(params_abs, cfg_s, view)
+    if mode == "train":
+        opt_cfg = OptimizerConfig()
+        step_fn = make_train_step(cfg_s, opt_cfg, ctx=ctx,
+                                  microbatches=mb_aux, unroll=True,
+                                  grad_shardings=pshard)
+        opt_abs = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params_abs)
+        from ..train.optimizer import AdamWState
+        oshard = AdamWState(step=NamedSharding(view, P()), m=pshard, v=pshard)
+        batch_abs = input_specs(cfg_s, shape_aux)
+        bshard = input_shardings(cfg_s, shape_aux, view)
+        fn = jax.jit(step_fn, in_shardings=(pshard, oshard, None, bshard),
+                     out_shardings=(pshard, oshard, None, None),
+                     donate_argnums=(0, 1))
+        lowered = fn.lower(params_abs, opt_abs, None, batch_abs)
+    elif mode == "prefill":
+        from ..models.transformer import forward
+
+        def prefill_fn(params, batch):
+            extras = {k: v for k, v in batch.items() if k != "tokens"}
+            logits, _aux = forward(params, cfg_s, batch["tokens"], ctx=ctx,
+                                   **extras)
+            return logits
+        batch_abs = input_specs(cfg_s, shape_aux)
+        bshard = input_shardings(cfg_s, shape_aux, view)
+        fn = jax.jit(prefill_fn, in_shardings=(pshard, bshard))
+        lowered = fn.lower(params_abs, batch_abs)
+    else:
+        from ..serve.decode import decode_step
+
+        def serve_fn(params, token, state):
+            return decode_step(params, cfg_s, token, state, ctx=ctx)
+        state_abs, sshard = decode_state_specs(cfg_s, shape_aux, view)
+        tok_abs = jax.ShapeDtypeStruct((shape_aux.global_batch, 1), jnp.int32)
+        dp = int(np.prod([view.shape[n] for n in view.axis_names
+                          if n in ("pod", "data")]))
+        dp_axes = tuple(n for n in view.axis_names if n in ("pod", "data"))
+        tshard = NamedSharding(
+            view, P(dp_axes if shape_aux.global_batch % dp == 0 else None,
+                    None))
+        fn = jax.jit(serve_fn, in_shardings=(pshard, tshard, sshard),
+                     donate_argnums=(2,))
+        lowered = fn.lower(params_abs, tok_abs, state_abs)
+    compiled = lowered.compile()
+    costs = cost_summary(compiled)
+    coll = parse_collectives(compiled.as_text())
+    return {"flops": costs.get("flops", 0.0),
+            "bytes": costs.get("bytes accessed", 0.0),
+            "wire": coll.total_wire_bytes,
+            "operand_sum": coll.total_operand_sum}
+
+
+def extrapolate_roofline(cfg, shape_cfg, multi_pod: bool, run_cfg,
+                         mb_real: int) -> Dict[str, Any]:
+    """Exact per-step roofline inputs via linear extrapolation."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    La, Lb = _aux_depths(cfg)
+    mode = shape_cfg.mode
+    out: Dict[str, Any] = {"L_a": La, "L_b": Lb, "mb_real": mb_real}
+    t0 = time.time()
+    if mode == "train":
+        b_micro = max(shape_cfg.global_batch // mb_real, 1)
+        A = _measure(_small_cfg(cfg, La), shape_cfg, mesh, run_cfg, mode,
+                     1, b_micro)
+        B = _measure(_small_cfg(cfg, Lb), shape_cfg, mesh, run_cfg, mode,
+                     1, b_micro)
+        C = _measure(_small_cfg(cfg, La), shape_cfg, mesh, run_cfg, mode,
+                     2, 2 * b_micro)
+        L = cfg.num_layers
+        terms = {}
+        for k in ("flops", "bytes", "wire", "operand_sum"):
+            s = (B[k] - A[k]) / (Lb - La)
+            loss_a = max(C[k] - A[k], 0.0)
+            opt = max(A[k] - loss_a, 0.0)
+            terms[k] = opt + mb_real * (loss_a + (L - La) * s)
+        out.update(terms)
+    else:
+        A = _measure(_small_cfg(cfg, La), shape_cfg, mesh, run_cfg, mode,
+                     1, shape_cfg.global_batch)
+        B = _measure(_small_cfg(cfg, Lb), shape_cfg, mesh, run_cfg, mode,
+                     1, shape_cfg.global_batch)
+        L = cfg.num_layers
+        terms = {}
+        for k in ("flops", "bytes", "wire", "operand_sum"):
+            s = (B[k] - A[k]) / (Lb - La)
+            terms[k] = A[k] + (L - La) * s
+        out.update(terms)
+    out["aux_compile_s"] = round(time.time() - t0, 1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cell runners
+# ---------------------------------------------------------------------------
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               run_overrides: Optional[Dict] = None) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape_cfg = SHAPES[shape_name]
+    skip = cell_supported(cfg, shape_name)
+    if skip:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multipod" if multi_pod else "pod",
+                "status": "skipped", "reason": skip}
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    from ..configs.base import RunConfig
+    rc_fields = {f.name for f in _dc.fields(RunConfig)}
+    merged = {**default_run_overrides(cfg), **(run_overrides or {})}
+    run_cfg = RunConfig(**{k: v for k, v in merged.items()
+                           if k in rc_fields})
+    ctx = make_context(mesh, cfg, run_cfg)
+    view = ctx.mesh
+    dp = int(np.prod([view.shape[n] for n in view.axis_names
+                      if n in ("pod", "data")]))
+    params_abs = abstract_params(cfg, dtype=jnp.bfloat16)
+    pshard = sharded_param_specs(params_abs, cfg, view)
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multipod" if multi_pod else "pod",
+        "chips": int(np.prod(list(mesh.devices.shape))),
+        "params_b": cfg.param_count() / 1e9,
+        "run_cfg": {"remat": run_cfg.remat,
+                    "sequence_parallel": run_cfg.sequence_parallel,
+                    "opt_state_dtype": getattr(run_cfg, "opt_state_dtype",
+                                               "float32")},
+    }
+
+    if shape_cfg.mode == "train":
+        mb = run_overrides.get("microbatches") if run_overrides else None
+        mb = mb or default_microbatches(cfg, shape_cfg, dp)
+        result["microbatches"] = mb
+        opt_dtype = (run_overrides or {}).get("opt_state_dtype", "float32")
+        opt_cfg = OptimizerConfig(state_dtype=opt_dtype)
+        step_fn = make_train_step(cfg, opt_cfg, ctx=ctx, microbatches=mb,
+                                  grad_shardings=pshard)
+        opt_abs = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params_abs)
+        from ..train.optimizer import AdamWState
+        if opt_dtype == "int8":
+            # int8 states carry (q, scale) tuples per leaf — let GSPMD place
+            oshard: Any = None
+        else:
+            # optimizer-state shardings mirror the FSDP+TP param shardings
+            oshard = AdamWState(step=NamedSharding(view, P()),
+                                m=pshard, v=pshard)
+        batch_abs = input_specs(cfg, shape_cfg)
+        bshard = input_shardings(cfg, shape_cfg, view)
+        fn = jax.jit(step_fn,
+                     in_shardings=(pshard, oshard, None, bshard),
+                     out_shardings=(pshard, oshard, None, None),
+                     donate_argnums=(0, 1))
+        lowered = fn.lower(params_abs, opt_abs, None, batch_abs)
+    elif shape_cfg.mode == "prefill":
+        from ..models.transformer import lm_loss, forward
+
+        def prefill_fn(params, batch):
+            extras = {k: v for k, v in batch.items() if k != "tokens"}
+            logits, _aux = forward(params, cfg, batch["tokens"], ctx=ctx,
+                                   **extras)
+            return logits
+        batch_abs = input_specs(cfg, shape_cfg)
+        bshard = input_shardings(cfg, shape_cfg, view)
+        fn = jax.jit(prefill_fn, in_shardings=(pshard, bshard))
+        lowered = fn.lower(params_abs, batch_abs)
+    else:  # decode
+        from ..serve.decode import decode_step
+
+        def serve_fn(params, token, state):
+            return decode_step(params, cfg, token, state, ctx=ctx)
+        state_abs, sshard = decode_state_specs(cfg, shape_cfg, view)
+        tok_abs = jax.ShapeDtypeStruct((shape_cfg.global_batch, 1), jnp.int32)
+        dp_axes = tuple(n for n in view.axis_names if n in ("pod", "data"))
+        tshard = NamedSharding(
+            view, P(dp_axes if shape_cfg.global_batch % dp == 0 else None,
+                    None))
+        fn = jax.jit(serve_fn, in_shardings=(pshard, tshard, sshard),
+                     donate_argnums=(2,))
+        lowered = fn.lower(params_abs, tok_abs, state_abs)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    costs = cost_summary(compiled)
+    mem = memory_summary(compiled)
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    chips = result["chips"]
+    # model flops: 6·N_active·D for train (fwd+bwd), 2·N_active·D for inference
+    tokens = shape_cfg.global_batch * (shape_cfg.seq_len
+                                       if shape_cfg.mode != "decode" else 1)
+    n_active = cfg.active_param_count()
+    mf = (6 if shape_cfg.mode == "train" else 2) * n_active * tokens
+    result.update(status="ok", lower_s=round(t_lower, 1),
+                  compile_s=round(t_compile, 1),
+                  cost=costs, memory=mem, collectives=coll.to_json(),
+                  hlo_bytes=len(hlo))
+    # raw roofline from the scanned module (while bodies counted once) —
+    # recorded for reference; the reported roofline is the extrapolation
+    raw = Roofline(hlo_flops=costs.get("flops", 0.0),
+                   hbm_bytes=costs.get("bytes accessed", 0.0),
+                   wire_bytes=coll.total_wire_bytes,
+                   chips=chips, model_flops=mf)
+    result["roofline_raw"] = raw.to_json()
+    if not multi_pod and not (run_overrides or {}).get("skip_aux"):
+        try:
+            ext = extrapolate_roofline(cfg, shape_cfg, multi_pod, run_cfg,
+                                       result.get("microbatches", 1))
+            roof = Roofline(hlo_flops=ext["flops"], hbm_bytes=ext["bytes"],
+                            wire_bytes=ext["wire"], chips=chips,
+                            model_flops=mf)
+            result["roofline"] = roof.to_json()
+            result["extrapolation"] = ext
+        except Exception as e:
+            result["roofline"] = raw.to_json()
+            result["aux_error"] = f"{type(e).__name__}: {e}"
+    else:
+        result["roofline"] = raw.to_json()
+    return result
+
+
+def artifact_path(arch: str, shape: str, mesh: str, tag: str = "") -> str:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    suffix = f"-{tag}" if tag else ""
+    return os.path.join(ARTIFACT_DIR,
+                        f"{arch}--{shape}--{mesh}{suffix}.json")
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, force: bool = False,
+             tag: str = "", run_overrides: Optional[Dict] = None) -> Dict:
+    mesh_name = "multipod" if multi_pod else "pod"
+    path = artifact_path(arch, shape, mesh_name, tag)
+    if not force and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    try:
+        result = lower_cell(arch, shape, multi_pod, run_overrides)
+    except Exception as e:  # record failures — they are bugs to fix
+        result = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                  "status": "error", "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-4000:]}
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = list_configs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = (["pod", "multipod"] if args.mesh == "both" else [args.mesh])
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                r = run_cell(arch, shape, mesh_name == "multipod",
+                             force=args.force, tag=args.tag)
+                status = r.get("status")
+                extra = ""
+                if status == "ok":
+                    roof = r["roofline"]
+                    extra = (f"compile {r['compile_s']}s dominant="
+                             f"{roof['dominant']} "
+                             f"tc={roof['t_compute']:.3e} "
+                             f"tm={roof['t_memory']:.3e} "
+                             f"tx={roof['t_collective']:.3e}")
+                elif status == "error":
+                    extra = r["error"][:160]
+                else:
+                    extra = r.get("reason", "")[:80]
+                print(f"[dryrun] {arch:18s} {shape:12s} {mesh_name:8s} "
+                      f"{status:7s} {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,221 @@
+"""HLO post-mortem: collective-traffic extraction + roofline terms.
+
+``cost_analysis()`` gives FLOPs and HBM bytes but not collective traffic, so
+we parse the compiled module text and classify every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Two byte accountings are recorded:
+  * ``operand_sum``   — the brief's prescription: Σ operand sizes
+  * ``wire_bytes``    — per-device bytes actually crossing links under ring
+                        algorithms: AR 2·size·(g-1)/g, AG/RS size·(g-1)/g
+                        (size = full gathered buffer), A2A size·(g-1)/g,
+                        CP size.
+Roofline terms use ``wire_bytes`` (documented in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_OP_RE = re.compile(
+    r"=\s+(?:\([^)]*\)|(?P<dtype>\w+)\[(?P<dims>[\d,]*)\][^ ]*)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(")
+_TUPLE_RE = re.compile(r"=\s+\((?P<parts>[^)]*)\)\s+"
+                       r"(?P<op>all-gather|all-reduce|reduce-scatter|"
+                       r"all-to-all|collective-permute)(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclass
+class CollectiveStats:
+    count: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    operand_sum: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    wire_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+    @property
+    def total_operand_sum(self) -> float:
+        return sum(self.operand_sum.values())
+
+    def to_json(self) -> Dict:
+        return {"count": dict(self.count),
+                "operand_sum": dict(self.operand_sum),
+                "wire_bytes": dict(self.wire_bytes),
+                "total_wire_bytes": self.total_wire_bytes,
+                "total_operand_sum": self.total_operand_sum}
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def parse_collectives(hlo_text: str, default_group: int = 1) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if not any(c in line for c in _COLLECTIVES):
+            continue
+        if "-done(" in line:
+            continue  # async pair: count the -start only
+        sizes: List[int] = []
+        op = None
+        m = _OP_RE.search(line)
+        if m:
+            op = m.group("op")
+            if m.group("dtype"):
+                sizes = [_shape_bytes(m.group("dtype"), m.group("dims"))]
+        if op is None:
+            m = _TUPLE_RE.search(line)
+            if not m:
+                continue
+            op = m.group("op")
+            sizes = [_shape_bytes(d, dd)
+                     for d, dd in _SHAPE_RE.findall(m.group("parts"))]
+        total = float(sum(sizes))
+        if total == 0 or op is None:
+            continue
+        g = max(_group_size(line, default_group), 1)
+        stats.count[op] += 1
+        # result-size accounting (result == operand for AR/A2A/CP; for AG the
+        # result is the gathered buffer, for RS the scattered shard)
+        if op == "all-reduce":
+            stats.operand_sum[op] += total
+            stats.wire_bytes[op] += 2.0 * total * (g - 1) / g
+        elif op == "all-gather":
+            stats.operand_sum[op] += total / g
+            stats.wire_bytes[op] += total * (g - 1) / g
+        elif op == "reduce-scatter":
+            stats.operand_sum[op] += total * g
+            stats.wire_bytes[op] += total * (g - 1)
+        elif op == "all-to-all":
+            stats.operand_sum[op] += total
+            stats.wire_bytes[op] += total * (g - 1) / g
+        elif op == "collective-permute":
+            stats.operand_sum[op] += total
+            stats.wire_bytes[op] += total
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# roofline
+# ---------------------------------------------------------------------------
+
+# TPU v5e per-chip constants (brief-specified)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link (≈ one link-direction budget)
+
+
+@dataclass
+class Roofline:
+    """All byte/FLOP inputs are PER-DEVICE quantities: ``cost_analysis()``
+    and the parsed HLO describe the per-device SPMD module (verified against
+    a hand-counted sharded matmul).  ``model_flops`` is the GLOBAL algorithmic
+    requirement (6·N·D style), so the useful-compute ratio divides by chips.
+
+    The brief's formulas divide global HLO numbers by chips — identical
+    values, expressed per-device here because that is what XLA reports."""
+
+    hlo_flops: float
+    hbm_bytes: float
+    wire_bytes: float
+    chips: int
+    model_flops: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def to_json(self) -> Dict:
+        return {
+            "hlo_flops": self.hlo_flops, "hbm_bytes": self.hbm_bytes,
+            "wire_bytes": self.wire_bytes, "chips": self.chips,
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+_COST_KEYS = ("flops", "bytes accessed", "transcendentals",
+              "optimal_seconds", "utilization")
+
+
+def cost_summary(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in dict(ca).items()
+            if k in _COST_KEYS and isinstance(v, (int, float))}
+
+
+def memory_summary(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = float(v)
+    return out

@@ -1,0 +1,48 @@
+"""Production mesh construction (+ vClos-ordered device lists).
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  Shapes per the deployment target:
+
+    single pod : (data=16, model=16)            = 256 chips
+    multi-pod  : (pod=2, data=16, model=16)     = 512 chips
+
+The ``pod`` axis is pure data parallelism across the DCN — exactly the
+traffic class the vClos scheduler isolates.  ``vclos_device_order`` permutes
+the device list per an IsolatedScheduler grant so the DP ring is
+leaf-contiguous (core/rankmap.py)."""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         devices: Optional[Sequence] = None):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    if devices is None:
+        all_dev = jax.devices()
+        if len(all_dev) < n:
+            raise RuntimeError(
+                f"mesh {shape} needs {n} devices, have {len(all_dev)} — "
+                "run under XLA_FLAGS=--xla_force_host_platform_device_count=512")
+        devices = all_dev[:n]
+    devices = np.asarray(devices).reshape(shape)
+    return jax.sharding.Mesh(devices, axes)
+
+
+def make_smoke_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CPU integration tests (8 host devices)."""
+    n = int(np.prod(shape))
+    devices = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devices, axes)
+
+
+def vclos_device_order(grant, spec, devices=None):
+    """Reorder devices per a vClos grant (leaf-contiguous ranks)."""
+    from ..core.rankmap import mesh_device_order
+    return mesh_device_order(grant.placement, spec, devices)

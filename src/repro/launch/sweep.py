@@ -1,0 +1,69 @@
+"""Dry-run sweep driver: every (arch × shape × mesh) cell in its own
+subprocess (crash isolation + bounded memory), cheap archs first so the
+roofline table fills up early.  Skips cells with committed artifacts.
+
+  PYTHONPATH=src python -m repro.launch.sweep [--mesh pod|multipod|both]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCH_COST_ORDER = [  # ascending estimated compile cost
+    "whisper-base", "tinyllama-1.1b", "olmo-1b", "rwkv6-3b",
+    "phi-3-vision-4.2b", "zamba2-2.7b", "deepseek-moe-16b",
+    "qwen1.5-32b", "mixtral-8x22b", "nemotron-4-340b",
+]
+SHAPE_ORDER = ["decode_32k", "long_500k", "train_4k", "prefill_32k"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both")
+    ap.add_argument("--timeout", type=int, default=2400)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    here = os.path.dirname(os.path.abspath(__file__))
+    root = os.path.abspath(os.path.join(here, "..", "..", ".."))
+    art = os.path.join(root, "artifacts", "dryrun")
+    t00 = time.time()
+    for mesh in meshes:
+        for arch in ARCH_COST_ORDER:
+            for shape in SHAPE_ORDER:
+                path = os.path.join(art, f"{arch}--{shape}--{mesh}.json")
+                if os.path.exists(path) and not args.force:
+                    try:
+                        with open(path) as f:
+                            if json.load(f).get("status") in ("ok", "skipped"):
+                                continue
+                    except Exception:
+                        pass
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape, "--mesh", mesh,
+                       "--force"]
+                t0 = time.time()
+                try:
+                    r = subprocess.run(
+                        cmd, cwd=root, timeout=args.timeout,
+                        env={**os.environ, "PYTHONPATH": os.path.join(root, "src")},
+                        capture_output=True, text=True)
+                    tail = (r.stdout or "").strip().splitlines()
+                    print(tail[-1] if tail else f"(no output rc={r.returncode})",
+                          f"[{time.time()-t0:.0f}s, total {time.time()-t00:.0f}s]",
+                          flush=True)
+                except subprocess.TimeoutExpired:
+                    with open(path, "w") as f:
+                        json.dump({"arch": arch, "shape": shape, "mesh": mesh,
+                                   "status": "error",
+                                   "error": f"timeout>{args.timeout}s"}, f)
+                    print(f"[sweep] {arch} {shape} {mesh} TIMEOUT", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""ModelContext: runtime distribution context threaded through model code.
+
+Keeps models mesh-agnostic: every sharding touchpoint goes through
+``ctx.shard(x, *axes)`` which is a no-op without a mesh (unit tests, single
+device) and a ``with_sharding_constraint`` under pjit.  Logical axis names:
+
+  "dp"   — data-parallel axes (("pod","data") on the production mesh)
+  "tp"   — tensor-parallel (attention heads / ffn / vocab)
+  "tp_a" — first factor of the model axis (mesh view), e.g. expert axis
+  "tp_b" — second factor
+  "sp"   — sequence-parallel target (activations' seq dim)
+
+``ep_axis``/``tp_axis`` name the raw mesh axes used by shard_map inside the
+MoE layer.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ModelContext:
+    mesh: Optional[Any] = None                 # jax.sharding.Mesh (view)
+    axes: Dict[str, Any] = field(default_factory=dict)  # logical -> mesh axes
+    ep_axis: Optional[str] = None              # raw axis for MoE all_to_all
+    ep_tp_axis: Optional[str] = None           # raw axis for expert-internal TP
+    remat: str = "none"                        # none | full | dots
+    sequence_parallel: bool = False
+    block_q: int = 512
+    block_k: int = 512
+    ssm_chunk: int = 16
+    # dry-run roofline mode: fully unroll every scan so XLA cost_analysis
+    # (which counts while bodies once) sees the true per-step cost
+    full_unroll: bool = False
+
+    def resolve(self, *logical: Optional[str]) -> P:
+        return P(*[self.axes.get(a) if a else None for a in logical])
+
+    def shard(self, x: jnp.ndarray, *logical: Optional[str]) -> jnp.ndarray:
+        if self.mesh is None:
+            return x
+        spec = self.resolve(*logical)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def maybe_remat(self, fn, policy: Optional[str] = None):
+        mode = policy or self.remat
+        if mode == "none":
+            return fn
+        if mode == "dots":
+            pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+            return jax.checkpoint(fn, policy=pol)
+        return jax.checkpoint(fn)
+
+
+NULL_CTX = ModelContext()

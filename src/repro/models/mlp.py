@@ -1,0 +1,30 @@
+"""Feed-forward blocks: gated SiLU (llama-style), GELU, squared-ReLU."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import Params, activation, dense_init
+
+
+def mlp_init(key, d_model: int, d_ff: int, act: str,
+             dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(k1, d_model, d_ff, dtype),
+        "w_down": dense_init(k2, d_ff, d_model, dtype),
+    }
+    if act == "silu":  # gated
+        p["w_gate"] = dense_init(k3, d_model, d_ff, dtype)
+    return p
+
+
+def mlp_apply(params: Params, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    up = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(x.dtype))
+    if act == "silu":
+        gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(x.dtype))
+        h = jax.nn.silu(gate) * up
+    else:
+        h = activation(act, up)
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(x.dtype))

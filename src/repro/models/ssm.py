@@ -1,0 +1,306 @@
+"""Attention-free sequence mixers: Mamba2 (SSD) and RWKV6 time-mix.
+
+Both are *chunked linear recurrences*:
+
+    S_t = diag(d_t) · S_{t-1} + k_t vᵀ_t          (state: (K, V) per head)
+    o_t = qᵀ_t · S_t  (+ diagonal/bonus terms)
+
+Mamba2's decay is a scalar per (head, step) — the chunked form is exactly
+stable (all decay factors ≤ 1).  RWKV6's decay is a *vector* per channel; we
+use a chunk-relative centering so scale factors stay within fp32 range and
+clamp per-step log-decay at LOG_DECAY_MIN (RWKV6's trained decays live near
+1.0; see tests for the verified range).
+
+The chunked form trades the O(T) sequential scan for
+O(T/C) scan steps of dense matmuls — the MXU-friendly layout the Pallas
+kernel (repro.kernels.rwkv6) mirrors block-for-block.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Params, dense_init, norm_apply, norm_init
+
+LOG_DECAY_MIN = -4.0  # per-step clamp; e^-4 ≈ 0.018 — far below trained decays
+
+
+# ---------------------------------------------------------------------------
+# chunked linear recurrence with per-channel decay
+# ---------------------------------------------------------------------------
+
+def chunked_linear_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                             log_decay: jnp.ndarray,
+                             bonus: Optional[jnp.ndarray] = None,
+                             chunk: int = 16,
+                             initial_state: Optional[jnp.ndarray] = None,
+                             unroll: bool = False
+                             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """q,k,v: (B,H,T,K/V); log_decay: (B,H,T,K) (≤0); bonus u: (H,K) or None.
+
+    Returns (out (B,H,T,V), final_state (B,H,K,V)).
+    RWKV6 convention: S is updated *after* the readout of token t when bonus
+    is given (current token contributes via u⊙k_t instead of through S).
+    """
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    assert t % chunk == 0, f"T={t} must be a multiple of chunk={chunk}"
+    nc = t // chunk
+    ld = jnp.clip(log_decay.astype(jnp.float32), LOG_DECAY_MIN, 0.0)
+    qf = q.astype(jnp.float32).reshape(b, h, nc, chunk, dk)
+    kf = k.astype(jnp.float32).reshape(b, h, nc, chunk, dk)
+    vf = v.astype(jnp.float32).reshape(b, h, nc, chunk, dv)
+    ld = ld.reshape(b, h, nc, chunk, dk)
+    # cumulative log decay within chunk, inclusive of step s: L_s = Σ_{τ≤s} ld
+    L = jnp.cumsum(ld, axis=3)                        # (b,h,nc,C,K), ≤ 0
+    Lc = L[:, :, :, -1:, :]                           # chunk total
+    if bonus is None:
+        # inclusive read: o_t sees S_t (current token folded in, no decay)
+        L_read = L
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    else:
+        # RWKV: o_t reads S_{t-1} (exclusive) + u ⊙ k_t diagonal term
+        L_read = L - ld
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    center = 0.5 * (L_read.max(axis=3, keepdims=True)
+                    + L.min(axis=3, keepdims=True))
+    q_in = qf * jnp.exp(L_read)                       # decay since chunk start
+    k_intra = kf * jnp.exp(center - L)                # scaled for intra matmul
+    q_intra = qf * jnp.exp(L_read - center)
+    k_out = kf * jnp.exp(Lc - L)                      # carry into next state
+
+    def body(S, inputs):
+        qi, ki_intra, vi, q_ini, k_outi, Lci = inputs
+        # cross-chunk: read the carried state
+        o_cross = jnp.einsum("bhck,bhkv->bhcv", q_ini, S)
+        # intra-chunk: masked pairwise scores (per-channel decay folded in)
+        scores = jnp.einsum("bhck,bhsk->bhcs", qi, ki_intra)
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        o_intra = jnp.einsum("bhcs,bhsv->bhcv", scores, vi)
+        # state update: S' = diag(exp(Lc)) S + Σ_s k_out_s v_sᵀ
+        S_new = jnp.exp(Lci).transpose(0, 1, 3, 2) * S + \
+            jnp.einsum("bhsk,bhsv->bhkv", k_outi, vi)
+        return S_new, o_cross + o_intra
+
+    S0 = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((b, h, dk, dv), jnp.float32))
+    inputs = (q_intra.transpose(2, 0, 1, 3, 4),
+              k_intra.transpose(2, 0, 1, 3, 4),
+              vf.transpose(2, 0, 1, 3, 4),
+              q_in.transpose(2, 0, 1, 3, 4),
+              k_out.transpose(2, 0, 1, 3, 4),
+              Lc.transpose(2, 0, 1, 3, 4))
+    S_fin, outs = jax.lax.scan(body, S0, inputs, unroll=nc if unroll else 1)
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, t, dv)
+    if bonus is not None:
+        diag = jnp.einsum("bhtk,hk,bhtk->bht", q.astype(jnp.float32),
+                          bonus.astype(jnp.float32), k.astype(jnp.float32))
+        out = out + diag[..., None] * v.astype(jnp.float32)
+    return out.astype(q.dtype), S_fin
+
+
+def linear_attention_step(q, k, v, log_decay, S,
+                          bonus: Optional[jnp.ndarray] = None):
+    """Single-token decode step.  q,k,v: (B,H,K/V); S: (B,H,K,V)."""
+    ld = jnp.clip(log_decay.astype(jnp.float32), LOG_DECAY_MIN, 0.0)
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    if bonus is not None:
+        o = jnp.einsum("bhk,bhkv->bhv", qf, S) \
+            + jnp.einsum("bhk,hk,bhk->bh", qf, bonus.astype(jnp.float32),
+                         kf)[..., None] * vf
+        S_new = jnp.exp(ld)[..., None] * S + kf[..., None] * vf[..., None, :]
+    else:
+        S_new = jnp.exp(ld)[..., None] * S + kf[..., None] * vf[..., None, :]
+        o = jnp.einsum("bhk,bhkv->bhv", qf, S_new)
+    return o.astype(q.dtype), S_new
+
+
+# ---------------------------------------------------------------------------
+# sequential oracle (tests)
+# ---------------------------------------------------------------------------
+
+def linear_attention_reference(q, k, v, log_decay, bonus=None,
+                               initial_state=None):
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    S = (initial_state.astype(jnp.float32) if initial_state is not None
+         else jnp.zeros((b, h, dk, dv), jnp.float32))
+    outs = []
+    for i in range(t):
+        o, S = linear_attention_step(q[:, :, i], k[:, :, i], v[:, :, i],
+                                     log_decay[:, :, i], S, bonus=bonus)
+        outs.append(o)
+    return jnp.stack(outs, axis=2).astype(q.dtype), S
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (SSD formulation)
+# ---------------------------------------------------------------------------
+
+def mamba2_init(key, d_model: int, d_state: int, heads: int, expand: int,
+                dtype=jnp.float32) -> Params:
+    d_inner = d_model * expand
+    kin, kx, kb, kc, kdt, ko, ka = jax.random.split(key, 7)
+    return {
+        "w_in": dense_init(kin, d_model, 2 * d_inner, dtype),     # x, z gate
+        "w_bc": dense_init(kb, d_model, 2 * d_state, dtype),       # B, C proj
+        "w_dt": dense_init(kdt, d_model, heads, dtype),
+        "a_log": jnp.zeros((heads,), jnp.float32),                 # A = -exp(a)
+        "d_skip": jnp.ones((heads,), jnp.float32),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "conv": (jax.random.normal(kx, (4, d_inner), jnp.float32) * 0.1
+                 ).astype(dtype),
+        "w_out": dense_init(ko, d_inner, d_model, dtype),
+        "norm": norm_init("rmsnorm", d_inner, jnp.float32),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv, kernel 4.  x: (B,T,D), w: (4,D).
+    state: (B,3,D) trailing context for decode.  Returns (y, new_state)."""
+    b, t, d = x.shape
+    kw = w.shape[0]
+    if state is None:
+        state = jnp.zeros((b, kw - 1, d), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + t] * w[i].astype(x.dtype) for i in range(kw))
+    return y, xp[:, -(kw - 1):]
+
+
+def mamba2_apply(params: Params, x: jnp.ndarray, heads: int, d_state: int,
+                 expand: int, chunk: int = 16,
+                 state: Optional[Dict] = None, unroll: bool = False
+                 ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x: (B,T,D).  state (decode): {"ssm": (B,H,K,V), "conv": (B,3,Din)}."""
+    b, t, d = x.shape
+    d_inner = d * expand
+    hd = d_inner // heads
+    xz = jnp.einsum("btd,de->bte", x, params["w_in"].astype(x.dtype))
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, conv_state = _causal_conv(xi, params["conv"],
+                                  None if state is None else state["conv"])
+    xi = jax.nn.silu(xi)
+    bc = jnp.einsum("btd,de->bte", x, params["w_bc"].astype(x.dtype))
+    B_, C_ = jnp.split(bc, 2, axis=-1)                       # (B,T,K)
+    dt = jax.nn.softplus(
+        jnp.einsum("btd,dh->bth", x, params["w_dt"].astype(x.dtype))
+        .astype(jnp.float32) + params["dt_bias"])            # (B,T,H)
+    a = -jnp.exp(params["a_log"])                            # (H,) < 0
+    log_decay = (dt * a)[..., None]                          # (B,T,H,1)
+    # heads: value = xi reshaped (B,T,H,hd); k/q = B_/C_ shared across heads
+    vals = xi.reshape(b, t, heads, hd).transpose(0, 2, 1, 3)
+    kq = jnp.broadcast_to(B_[:, None], (b, heads, t, d_state))
+    qq = jnp.broadcast_to(C_[:, None], (b, heads, t, d_state))
+    ldec = jnp.broadcast_to(log_decay.transpose(0, 2, 1, 3),
+                            (b, heads, t, d_state))
+    # discretised input scale: k ⊙ dt
+    kq = kq * dt.transpose(0, 2, 1)[..., None]
+    if state is None:
+        out, S = chunked_linear_attention(qq, kq, vals, ldec, chunk=chunk,
+                                          unroll=unroll)
+        new_state = None
+    else:
+        o, S = linear_attention_step(qq[:, :, 0], kq[:, :, 0], vals[:, :, 0],
+                                     ldec[:, :, 0], state["ssm"])
+        out = o[:, :, None]
+        new_state = {"ssm": S, "conv": conv_state}
+    out = out + params["d_skip"].astype(out.dtype)[None, :, None, None] * vals
+    y = out.transpose(0, 2, 1, 3).reshape(b, t, d_inner)
+    y = norm_apply("rmsnorm", params["norm"], y) * jax.nn.silu(z)
+    y = jnp.einsum("bte,ed->btd", y, params["w_out"].astype(x.dtype))
+    if state is not None:
+        return y, new_state
+    return y, {"ssm": S, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 block (time-mix + channel-mix)
+# ---------------------------------------------------------------------------
+
+def rwkv6_init(key, d_model: int, head_dim: int, dtype=jnp.float32) -> Params:
+    heads = d_model // head_dim
+    kr, kk, kv, kw, kg, ko, ku, kmx = jax.random.split(key, 8)
+    return {
+        "w_r": dense_init(kr, d_model, d_model, dtype),
+        "w_k": dense_init(kk, d_model, d_model, dtype),
+        "w_v": dense_init(kv, d_model, d_model, dtype),
+        "w_g": dense_init(kg, d_model, d_model, dtype),
+        "w_o": dense_init(ko, d_model, d_model, dtype),
+        # data-dependent decay: low-rank path w = exp(-exp(base + x@A@B))
+        "w_decay_a": dense_init(kw, d_model, 64, dtype),
+        "w_decay_b": dense_init(kmx, 64, d_model, dtype),
+        "decay_base": jnp.full((d_model,), -0.5, jnp.float32),
+        "bonus_u": (jax.random.normal(ku, (heads, head_dim), jnp.float32)
+                    * 0.1),
+        "mix_x": jnp.full((5, d_model), 0.5, jnp.float32),
+        "ln_x": norm_init("layernorm", d_model, jnp.float32),
+    }
+
+
+def rwkv6_time_mix(params: Params, x: jnp.ndarray, head_dim: int,
+                   chunk: int = 16, state: Optional[Dict] = None,
+                   unroll: bool = False) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B,T,D).  state (decode): {"S": (B,H,K,V), "last": (B,D)}."""
+    b, t, d = x.shape
+    heads = d // head_dim
+    last = (jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+            if state is None else
+            jnp.concatenate([state["last"][:, None], x[:, :-1]], axis=1))
+    mix = params["mix_x"].astype(x.dtype)
+    xs = [x + (last - x) * mix[i] for i in range(5)]  # r,k,v,g,w token-shift
+    r = jnp.einsum("btd,de->bte", xs[0], params["w_r"].astype(x.dtype))
+    k = jnp.einsum("btd,de->bte", xs[1], params["w_k"].astype(x.dtype))
+    v = jnp.einsum("btd,de->bte", xs[2], params["w_v"].astype(x.dtype))
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xs[3],
+                               params["w_g"].astype(x.dtype)))
+    dec = jnp.einsum("btd,de->bte", jnp.tanh(
+        jnp.einsum("btd,df->btf", xs[4], params["w_decay_a"].astype(x.dtype))),
+        params["w_decay_b"].astype(x.dtype)).astype(jnp.float32)
+    log_decay = -jnp.exp(params["decay_base"] + dec)          # (B,T,D) < 0
+
+    def split_heads(y):
+        return y.reshape(b, t, heads, head_dim).transpose(0, 2, 1, 3)
+
+    rq, kk_, vv, ld = map(split_heads, (r, k, v, log_decay.astype(x.dtype)))
+    if state is None:
+        out, S = chunked_linear_attention(rq, kk_, vv, ld, chunk=chunk,
+                                          bonus=params["bonus_u"],
+                                          unroll=unroll)
+    else:
+        o, S = linear_attention_step(rq[:, :, 0], kk_[:, :, 0], vv[:, :, 0],
+                                     ld[:, :, 0], state["S"],
+                                     bonus=params["bonus_u"])
+        out = o[:, :, None]
+    y = out.transpose(0, 2, 1, 3).reshape(b, t, d)
+    y = norm_apply("layernorm", params["ln_x"], y) * g
+    y = jnp.einsum("btd,de->btd", y, params["w_o"].astype(x.dtype))
+    return y, {"S": S, "last": x[:, -1]}
+
+
+def rwkv6_channel_mix_init(key, d_model: int, d_ff: int,
+                           dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_k": dense_init(k1, d_model, d_ff, dtype),
+        "w_v": dense_init(k2, d_ff, d_model, dtype),
+        "mix": jnp.full((d_model,), 0.5, jnp.float32),
+    }
+
+
+def rwkv6_channel_mix(params: Params, x: jnp.ndarray,
+                      state: Optional[jnp.ndarray] = None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, t, d = x.shape
+    last = (jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+            if state is None else
+            jnp.concatenate([state[:, None], x[:, :-1]], axis=1))
+    xk = x + (last - x) * params["mix"].astype(x.dtype)
+    h = jnp.einsum("btd,df->btf", xk, params["w_k"].astype(x.dtype))
+    h = jnp.square(jax.nn.relu(h))
+    y = jnp.einsum("btf,fd->btd", h, params["w_v"].astype(x.dtype))
+    return y, x[:, -1]

@@ -1,0 +1,255 @@
+"""Sharding rules: mesh views, parameter specs, input specs.
+
+The production mesh is fixed — ``(data=16, model=16)`` per pod, with a pure
+-DP ``pod`` axis in front (launch/mesh.py).  Architectures map onto it via a
+*mesh view*: the 16-way ``model`` axis is reshaped into two factors
+``("a", "b")`` chosen per arch so every sharded dimension divides evenly:
+
+  dense     a = largest divisor of num_heads dividing 16 (heads over "a");
+            d_ff / vocab shard over ("a","b") jointly
+  moe       a = EP degree (experts over "a"), b = expert-internal TP
+  ssm/hybrid a·b split chosen for rwkv heads / mamba d_inner
+
+Logical-axis table (consumed by ModelContext.shard):
+  dp -> ("pod", "data")   tp -> ("a", "b")   tp_a -> "a"   tp_b -> "b"
+  sp -> ("a","b") when sequence_parallel (activation seq dim between blocks)
+
+Parameter PartitionSpecs are produced by rule functions matched on the
+pytree path — the same mechanism MaxText/T5X use, minus the registry
+ceremony.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.context import ModelContext
+
+DP = ("pod", "data")
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    best = 1
+    for d in range(1, cap + 1):
+        if n % d == 0 and cap % d == 0:
+            best = d
+    return best
+
+
+def choose_view_factors(cfg, model_axis: int) -> Tuple[int, int]:
+    """(a, b) with a·b = model_axis, per-family (see module docstring)."""
+    if cfg.family == "moe":
+        a = _largest_divisor_leq(cfg.moe_num_experts, model_axis)
+        return a, model_axis // a
+    heads = cfg.num_heads if cfg.family != "ssm" else (
+        cfg.d_model // cfg.rwkv_head_dim)
+    a = _largest_divisor_leq(heads, model_axis)
+    return a, model_axis // a
+
+
+def mesh_view(mesh: Mesh, cfg) -> Tuple[Mesh, Dict[str, Any]]:
+    """Reshape the production mesh's model axis into ("a", "b")."""
+    names = mesh.axis_names
+    shape = mesh.devices.shape
+    model_axis = shape[-1]
+    a, b = choose_view_factors(cfg, model_axis)
+    new_shape = shape[:-1] + (a, b)
+    new_names = tuple(names[:-1]) + ("a", "b")
+    devices = mesh.devices.reshape(new_shape)
+    view = Mesh(devices, new_names)
+    dp = tuple(n for n in new_names if n in ("pod", "data"))
+    axes = {
+        "dp": dp if len(dp) > 1 else dp[0],
+        "tp": ("a", "b"),
+        "tp_a": "a",
+        "tp_b": "b",
+    }
+    return view, axes
+
+
+def make_context(mesh: Optional[Mesh], cfg, run_cfg=None) -> ModelContext:
+    if mesh is None:
+        return ModelContext()
+    view, axes = mesh_view(mesh, cfg)
+    sp = bool(run_cfg and run_cfg.sequence_parallel)
+    if sp:
+        axes = dict(axes, sp=("a", "b"))
+    return ModelContext(
+        mesh=view, axes=axes,
+        ep_axis="a" if cfg.family == "moe" else None,
+        ep_tp_axis=("b" if (cfg.family == "moe" and view.shape["b"] > 1)
+                    else None),
+        remat=(run_cfg.remat if run_cfg else "none"),
+        sequence_parallel=sp,
+        ssm_chunk=(run_cfg.ssm_chunk if run_cfg else 128),
+    )
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding rules
+# ---------------------------------------------------------------------------
+
+# (path regex, spec builder) — first match wins.  Leading layer-stack axis is
+# added automatically for leaves under layers/dense_layers/encoder_layers/...
+_STACKED = re.compile(
+    r"(layers|dense_layers|encoder_layers|cross_attn)($|/)")
+
+def _rules(cfg):
+    tp = ("a", "b")
+    return [
+        # embeddings / head: vocab over tp
+        (r"embed$",            P(tp, None)),
+        (r"lm_head$",          P(None, tp)),
+        (r"patch_proj$",       P(None, tp)),
+        # attention: fused head dim over tp
+        (r"attn/w[qkv]$",      P(None, tp)),
+        (r"attn/wo$",          P(tp, None)),
+        (r"attn/b[qkv]$",      P(tp)),
+        # dense mlp
+        (r"mlp/w_(up|gate)$",  P(None, tp)),
+        (r"mlp/w_down$",       P(tp, None)),
+        # moe experts: E over "a", F over "b"
+        (r"moe/w_(up|gate)$",  P("a", None, "b")),
+        (r"moe/w_down$",       P("a", "b", None)),
+        (r"moe/router$",       P(None, None)),
+        (r"moe/shared/w_(up|gate)$", P(None, "b")),
+        (r"moe/shared/w_down$",      P("b", None)),
+        # rwkv time-mix / channel-mix
+        (r"tmix/w_[rkvgo]$",   P(None, tp)),
+        (r"tmix/w_decay_a$",   P(None, None)),
+        (r"tmix/w_decay_b$",   P(None, tp)),
+        (r"cmix/w_k$",         P(None, tp)),
+        (r"cmix/w_v$",         P(tp, None)),
+        # mamba2
+        (r"mamba/w_in$",       P(None, tp)),
+        (r"mamba/w_out$",      P(tp, None)),
+        (r"mamba/w_bc$",       P(None, None)),
+        (r"mamba/w_dt$",       P(None, None)),
+        (r"mamba/conv$",       P(None, tp)),
+        (r"mamba/norm/scale$", P(tp)),
+        (r"shared_proj$",      P(None, tp)),
+        # everything else (norms, scalars): replicated
+        (r".*",                P()),
+    ]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_spec(path, leaf, cfg) -> P:
+    s = _path_str(path)
+    stacked = bool(_STACKED.search(s))
+    for pat, spec in _rules(cfg):
+        if re.search(pat, s):
+            # hybrid shared_block params live under shared_block/attn etc. —
+            # they match the attn/mlp rules; zamba shared block is NOT stacked
+            if stacked:
+                if len(spec) + 1 > leaf.ndim:
+                    return P()  # scalar-ish leaf; replicate
+                return P(None, *spec)
+            if len(spec) > leaf.ndim:
+                return P()
+            return spec
+    return P()
+
+
+def sanitize_spec(spec: P, leaf, view) -> P:
+    """Drop/reduce sharding axes that do not divide a dimension evenly.
+
+    Tuple entries shrink from the right (("a","b") → ("a",) → None) so the
+    largest feasible factor is kept — e.g. whisper's vocab 51865 has no
+    power-of-two factor and falls back to replication, while 40-head archs
+    keep the 8-way "a" factor of the 16-way model axis."""
+    entries = []
+    for d in range(len(spec)):
+        ax = spec[d]
+        if ax is None:
+            entries.append(None)
+            continue
+        axes = list(ax) if isinstance(ax, tuple) else [ax]
+        while axes:
+            size = 1
+            for a in axes:
+                size *= view.shape[a]
+            if leaf.shape[d] % size == 0:
+                break
+            axes.pop()
+        entries.append(tuple(axes) if len(axes) > 1 else
+                       (axes[0] if axes else None))
+    return P(*entries)
+
+
+def param_shardings(params, cfg, mesh_or_view) -> Any:
+    """NamedSharding pytree for the parameter tree."""
+    view = mesh_or_view
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            view, sanitize_spec(param_spec(path, leaf, cfg), leaf, view)),
+        params)
+
+
+def abstract_params(cfg, dtype=jnp.float32):
+    """ShapeDtypeStruct pytree via eval_shape — no allocation."""
+    from ..models.transformer import init_lm
+    return jax.eval_shape(
+        lambda key: init_lm(cfg, key, dtype=dtype), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, shardable, no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg, shape_cfg, view: Optional[Mesh] = None) -> Dict[str, Any]:
+    """Model inputs for one (arch × shape) cell as ShapeDtypeStructs.
+
+    train/prefill: tokens+labels (B, S); decode: one token + decode state is
+    built separately (serve.decode.decode_state_specs).
+    """
+    b, s = shape_cfg.global_batch, shape_cfg.seq_len
+    sds = jax.ShapeDtypeStruct
+    out: Dict[str, Any] = {}
+    if shape_cfg.mode in ("train", "prefill"):
+        out["tokens"] = sds((b, s), jnp.int32)
+        if shape_cfg.mode == "train":
+            out["labels"] = sds((b, s), jnp.int32)
+        if cfg.frontend == "patch":
+            out["patch_embeds"] = sds((b, cfg.num_patches, cfg.d_model),
+                                      jnp.bfloat16)
+        if cfg.frontend == "frames":
+            out["frame_embeds"] = sds((b, s, cfg.d_model), jnp.bfloat16)
+    else:  # decode: one new token against a cache of length s
+        out["tokens"] = sds((b, 1), jnp.int32)
+    return out
+
+
+def input_shardings(cfg, shape_cfg, view: Mesh) -> Dict[str, Any]:
+    dp = tuple(n for n in view.axis_names if n in ("pod", "data"))
+    dp_axes = dp if len(dp) > 1 else dp[0]
+    b = shape_cfg.global_batch
+    dp_size = int(np.prod([view.shape[n] for n in dp]))
+    batch_spec = dp_axes if b % dp_size == 0 else None  # tiny-batch decode
+    out = {"tokens": NamedSharding(view, P(batch_spec, None))}
+    if shape_cfg.mode == "train":
+        out["labels"] = NamedSharding(view, P(batch_spec, None))
+    if shape_cfg.mode in ("train", "prefill"):
+        if cfg.frontend == "patch":
+            out["patch_embeds"] = NamedSharding(view, P(batch_spec, None, None))
+        if cfg.frontend == "frames":
+            out["frame_embeds"] = NamedSharding(view, P(batch_spec, None, None))
+    return out

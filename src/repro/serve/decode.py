@@ -1,0 +1,238 @@
+"""Serving: prefill (build caches) and decode_step (one token per call).
+
+``decode_step`` is the artifact the decode/long-context dry-run cells lower:
+one new token against a KV cache of ``seq_len`` (full for dense, rolling
+window for SWA, O(1) recurrent state for SSM/hybrid).  ``prefill`` exists so
+tests can check decode logits against teacher-forced ``forward`` logits.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.attention import (decode_attention, out_project, qkv_project)
+from ..models.common import apply_rope, norm_apply, sinusoidal_positions
+from ..models.context import NULL_CTX, ModelContext
+from ..models.mlp import mlp_apply
+from ..models.moe import moe_apply_dense
+from ..models.ssm import (linear_attention_step, mamba2_apply,
+                          rwkv6_channel_mix, rwkv6_time_mix)
+from .kv_cache import attn_cache_len, cache_write, init_decode_state
+
+
+# ---------------------------------------------------------------------------
+# per-layer decode helpers
+# ---------------------------------------------------------------------------
+
+def _attn_decode(layer_attn: Dict, x: jnp.ndarray, cfg, pos: jnp.ndarray,
+                 kc: jnp.ndarray, vc: jnp.ndarray, *, use_rope: bool = True
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (B,1,D). Returns (attn_out, new k_cache, new v_cache)."""
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    q, k, v = qkv_project(layer_attn, x, hq, hkv, hd)
+    if use_rope:
+        positions = jnp.reshape(pos, (1, 1))
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    kc, vc = cache_write(kc, vc, k.astype(kc.dtype), v.astype(vc.dtype), pos)
+    cap = kc.shape[1]
+    valid = jnp.minimum(pos + 1, cap)
+    o = decode_attention(q, kc, vc, valid, window=cfg.sliding_window)
+    return out_project(layer_attn, o.astype(x.dtype)), kc, vc
+
+
+def _moe_or_mlp(layer: Dict, h: jnp.ndarray, cfg):
+    if "moe" in layer:
+        y, _aux = moe_apply_dense(layer["moe"], h, cfg)
+        return y
+    return mlp_apply(layer["mlp"], h, cfg.act)
+
+
+# ---------------------------------------------------------------------------
+# decode_step
+# ---------------------------------------------------------------------------
+
+def decode_step(params: Dict, cfg, token: jnp.ndarray, state: Dict, *,
+                ctx: ModelContext = NULL_CTX) -> Tuple[jnp.ndarray, Dict]:
+    """token: (B, 1) int32 -> (logits (B, 1, V), new state)."""
+    compute_dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = jnp.take(params["embed"], token, axis=0).astype(compute_dtype)
+    x = ctx.shard(x, "dp", None, None)
+    pos = state["cache_len"]
+    new_state = dict(state)
+
+    if cfg.family == "ssm":
+        def body(carry, xs):
+            h = carry
+            lp, S, tlast, clast = xs
+            hn = norm_apply(cfg.norm, lp["ln1"], h)
+            o, st = rwkv6_time_mix(lp["tmix"], hn, cfg.rwkv_head_dim,
+                                   state={"S": S, "last": tlast})
+            h = h + o
+            hn = norm_apply(cfg.norm, lp["ln2"], h)
+            o, cl = rwkv6_channel_mix(
+                lp["cmix"], hn,
+                state=clast)
+            h = h + o
+            return h, (st["S"], st["last"].astype(tlast.dtype),
+                       cl.astype(clast.dtype))
+        x, (S, tl, cl) = jax.lax.scan(
+            body, x, (params["layers"], state["rwkv_S"],
+                      state["tmix_last"], state["cmix_last"]))
+        new_state.update(rwkv_S=S, tmix_last=tl, cmix_last=cl)
+
+    elif cfg.family == "hybrid":
+        heads = cfg.ssm_heads or cfg.num_heads
+        k_every = cfg.attn_every
+        ngroups = cfg.num_layers // k_every
+        stk = jax.tree_util.tree_map(
+            lambda a: a.reshape(ngroups, k_every, *a.shape[1:]),
+            params["layers"])
+        mamba_ssm = state["mamba_ssm"].reshape(
+            ngroups, k_every, *state["mamba_ssm"].shape[1:])
+        mamba_conv = state["mamba_conv"].reshape(
+            ngroups, k_every, *state["mamba_conv"].shape[1:])
+        shared = params["shared_block"]
+        sproj = params["shared_proj"]
+        x0 = x
+
+        def group(carry, xs):
+            h = carry
+            glayers, gssm, gconv, kc, vc = xs
+
+            def mb(hh, ys):
+                lp, S, cv = ys
+                o, st = mamba2_apply(lp["mamba"],
+                                     norm_apply(cfg.norm, lp["ln"], hh),
+                                     heads, cfg.ssm_state, cfg.ssm_expand,
+                                     state={"ssm": S, "conv": cv})
+                return hh + o, (st["ssm"], st["conv"].astype(cv.dtype))
+            h, (S2, cv2) = jax.lax.scan(mb, h, (glayers, gssm, gconv))
+            cat = jnp.concatenate([h, x0], axis=-1)
+            z = jnp.einsum("bsd,de->bse", cat, sproj.astype(cat.dtype))
+            zn = norm_apply(cfg.norm, shared["ln1"], z)
+            a, kc, vc = _attn_decode(shared["attn"], zn, cfg, pos, kc, vc)
+            z = z + a
+            zn = norm_apply(cfg.norm, shared["ln2"], z)
+            z = z + _moe_or_mlp(shared, zn, cfg)
+            return h + z, (S2, cv2, kc, vc)
+        x, (S, cv, kc, vc) = jax.lax.scan(
+            group, x, (stk, mamba_ssm, mamba_conv,
+                       state["k_cache"], state["v_cache"]))
+        new_state.update(
+            mamba_ssm=S.reshape(state["mamba_ssm"].shape),
+            mamba_conv=cv.reshape(state["mamba_conv"].shape),
+            k_cache=kc, v_cache=vc)
+
+    else:  # dense / moe / vlm / enc-dec decoder
+        if cfg.family == "moe" and "dense_layers" in params:
+            def dbody(carry, xs):
+                h = carry
+                lp, kc, vc = xs
+                hn = norm_apply(cfg.norm, lp["ln1"], h)
+                a, kc, vc = _attn_decode(lp["attn"], hn, cfg, pos, kc, vc)
+                h = h + a
+                hn = norm_apply(cfg.norm, lp["ln2"], h)
+                h = h + mlp_apply(lp["mlp"], hn, cfg.act)
+                return h, (kc, vc)
+            x, (kcd, vcd) = jax.lax.scan(
+                dbody, x, (params["dense_layers"],
+                           state["k_cache_dense"], state["v_cache_dense"]))
+            new_state.update(k_cache_dense=kcd, v_cache_dense=vcd)
+
+        has_cross = cfg.is_encoder_decoder
+        hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+
+        def body(carry, xs):
+            h = carry
+            if has_cross:
+                (lp, xl, kc, vc, ck, cv_) = xs
+            else:
+                (lp, kc, vc) = xs
+            hn = norm_apply(cfg.norm, lp["ln1"], h)
+            a, kc, vc = _attn_decode(lp["attn"], hn, cfg, pos, kc, vc)
+            h = h + a
+            hn = norm_apply(cfg.norm, lp["ln2"], h)
+            h = h + _moe_or_mlp(lp, hn, cfg)
+            if has_cross:
+                cn = norm_apply(cfg.norm, xl["ln"], h)
+                q, _, _ = qkv_project(xl["attn"], cn, hq, hkv, hd)
+                o = decode_attention(q, ck, cv_, state["enc_len"])
+                h = h + out_project(xl["attn"], o.astype(h.dtype))
+            return h, (kc, vc)
+
+        if has_cross:
+            xs = (params["layers"], params["cross_attn"], state["k_cache"],
+                  state["v_cache"], state["cross_k"], state["cross_v"])
+        else:
+            xs = (params["layers"], state["k_cache"], state["v_cache"])
+        x, (kc, vc) = jax.lax.scan(body, x, xs)
+        new_state.update(k_cache=kc, v_cache=vc)
+
+    x = norm_apply(cfg.norm, params["ln_f"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    logits = ctx.shard(logits, "dp", None, "tp")
+    new_state["cache_len"] = pos + 1
+    return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# prefill (tests + examples; returns caches consistent with decode_step)
+# ---------------------------------------------------------------------------
+
+def prefill(params: Dict, cfg, tokens: jnp.ndarray, max_len: int, *,
+            ctx: ModelContext = NULL_CTX,
+            frame_embeds: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, Dict]:
+    """Run the prompt token-by-token through decode_step (reference-grade,
+    O(S) steps — fine for tests/examples; production prefill would reuse
+    forward() with cache extraction)."""
+    b, s = tokens.shape
+    state = init_decode_state(cfg, b, max_len,
+                              dtype=jnp.bfloat16 if cfg.dtype == "bfloat16"
+                              else jnp.float32)
+    if cfg.is_encoder_decoder:
+        state = _encode_cross(params, cfg, frame_embeds, state, ctx)
+    logits = None
+    step = jax.jit(lambda p, t, st: decode_step(p, cfg, t, st, ctx=ctx)) \
+        if s > 8 else (lambda p, t, st: decode_step(p, cfg, t, st, ctx=ctx))
+    for i in range(s):
+        logits, state = step(params, tokens[:, i:i + 1], state)
+    return logits, state
+
+
+def _encode_cross(params, cfg, frame_embeds, state, ctx) -> Dict:
+    """Run the encoder once; precompute per-layer cross-attention K/V."""
+    from ..models.transformer import _dense_block
+    enc = frame_embeds
+    enc = enc + sinusoidal_positions(enc.shape[1], cfg.d_model
+                                     ).astype(enc.dtype)[None]
+
+    def ebody(carry, lp):
+        return _dense_block(lp, carry, cfg, ctx, positions=None,
+                            causal=False), None
+    enc, _ = jax.lax.scan(ebody, enc, params["encoder_layers"])
+    enc = norm_apply(cfg.norm, params["ln_enc"], enc)
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+
+    def collect(_, xl):
+        _, ek, ev = qkv_project(xl["attn"], enc, hq, hkv, hd)
+        return None, (ek, ev)
+    _, (ck, cv) = jax.lax.scan(collect, None, params["cross_attn"])
+    state = dict(state)
+    # pad/trim encoder length to the cross-cache capacity
+    cap = state["cross_k"].shape[2]
+    ck = ck[:, :, :cap]
+    cv = cv[:, :, :cap]
+    pad = cap - ck.shape[2]
+    if pad:
+        ck = jnp.pad(ck, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(cv, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    state["cross_k"] = ck.astype(state["cross_k"].dtype)
+    state["cross_v"] = cv.astype(state["cross_v"].dtype)
+    state["enc_len"] = jnp.asarray(enc.shape[1], jnp.int32)
+    return state

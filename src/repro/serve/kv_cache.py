@@ -1,0 +1,83 @@
+"""Per-family decode state: KV caches, SSM states, rolling SWA windows.
+
+Cache layouts (leading L = layer axis, consumed/produced by lax.scan):
+  attention   k/v: (L, B, cap, Hkv, hd), cap = min(max_len, window or inf)
+  enc-dec     + cross k/v: (L, B, S_enc, Hkv, hd) (precomputed at prefill)
+  rwkv6       S: (L, B, H, K, V); last token-shift vectors (L, B, D) ×2
+  mamba2      ssm: (L, B, H, K, hd); conv: (L, B, 3, D_inner)
+  hybrid      mamba states + shared-attn caches per application point
+
+``cache_len`` is a scalar int32 — the number of tokens already written.
+SWA caches are rolling: slot = pos % cap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def attn_cache_len(cfg, max_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(max_len, cfg.sliding_window)
+    return max_len
+
+
+def init_decode_state(cfg, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Zeroed decode state for one model (shapes only matter for dry-run)."""
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim_
+    state: Dict[str, Any] = {"cache_len": jnp.zeros((), jnp.int32)}
+    if cfg.family == "ssm":
+        h = cfg.d_model // cfg.rwkv_head_dim
+        k = cfg.rwkv_head_dim
+        state["rwkv_S"] = jnp.zeros((cfg.num_layers, batch, h, k, k),
+                                    jnp.float32)
+        state["tmix_last"] = jnp.zeros((cfg.num_layers, batch, cfg.d_model),
+                                       dtype)
+        state["cmix_last"] = jnp.zeros((cfg.num_layers, batch, cfg.d_model),
+                                       dtype)
+        return state
+    if cfg.family == "hybrid":
+        heads = cfg.ssm_heads or cfg.num_heads
+        d_in = cfg.d_model * cfg.ssm_expand
+        state["mamba_ssm"] = jnp.zeros(
+            (cfg.num_layers, batch, heads, cfg.ssm_state, d_in // heads),
+            jnp.float32)
+        state["mamba_conv"] = jnp.zeros((cfg.num_layers, batch, 3, d_in),
+                                        dtype)
+        ngroups = cfg.num_layers // cfg.attn_every
+        cap = attn_cache_len(cfg, max_len)
+        state["k_cache"] = jnp.zeros((ngroups, batch, cap, hkv, hd), dtype)
+        state["v_cache"] = jnp.zeros((ngroups, batch, cap, hkv, hd), dtype)
+        return state
+    cap = attn_cache_len(cfg, max_len)
+    nl = cfg.num_layers
+    if cfg.family == "moe" and cfg.moe_first_dense:
+        nl = cfg.num_layers - cfg.moe_first_dense  # MoE-layer scan length
+        state["k_cache_dense"] = jnp.zeros(
+            (cfg.moe_first_dense, batch, cap, hkv, hd), dtype)
+        state["v_cache_dense"] = jnp.zeros(
+            (cfg.moe_first_dense, batch, cap, hkv, hd), dtype)
+    state["k_cache"] = jnp.zeros((nl, batch, cap, hkv, hd), dtype)
+    state["v_cache"] = jnp.zeros((nl, batch, cap, hkv, hd), dtype)
+    if cfg.is_encoder_decoder:
+        state["cross_k"] = jnp.zeros((nl, batch, max_len, hkv, hd), dtype)
+        state["cross_v"] = jnp.zeros((nl, batch, max_len, hkv, hd), dtype)
+        state["enc_len"] = jnp.zeros((), jnp.int32)
+    return state
+
+
+def cache_write(k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                k_new: jnp.ndarray, v_new: jnp.ndarray,
+                pos: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Write one token (B, 1, Hkv, hd) at slot pos % cap (rolling-safe)."""
+    cap = k_cache.shape[1]
+    slot = pos % cap
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new, slot, axis=1)
+    return k_cache, v_cache

@@ -1,0 +1,99 @@
+"""Hypothesis property tests on the paper's theoretical core.
+
+Lemma 5.1: *any* Leaf-wise Permutation phase is contention-free under *any*
+source-routing strategy (injective per-leaf port→uplink maps).
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.patterns import is_leafwise_permutation
+from repro.core.routing import SourceRouting, contention
+from repro.core.topology import ClusterSpec
+from repro.core.traffic import Flow
+
+SPEC = ClusterSpec(num_leafs=4, num_spines=8, gpus_per_leaf=8,
+                   gpus_per_server=4)
+
+
+@st.composite
+def leafwise_phase(draw):
+    """Random Definition-1-conforming phase: pick an injective leaf→leaf
+    relation, then wire distinct src/dst GPUs along it."""
+    nl = SPEC.num_leafs
+    per = SPEC.gpus_per_leaf
+    # injective partial map on leafs (as a permutation restricted to a set)
+    perm = draw(st.permutations(range(nl)))
+    active = draw(st.lists(st.integers(0, nl - 1), min_size=1, max_size=nl,
+                           unique=True))
+    flows = []
+    for j in active:
+        k = perm[j]
+        if k == j:
+            continue
+        nflows = draw(st.integers(1, per))
+        srcs = draw(st.permutations(range(per)))[:nflows]
+        dsts = draw(st.permutations(range(per)))[:nflows]
+        for s_, d_ in zip(srcs, dsts):
+            flows.append(Flow(j * per + s_, k * per + d_, 1.0))
+    return flows
+
+
+@st.composite
+def random_port_maps(draw):
+    maps = {}
+    for leaf in range(SPEC.num_leafs):
+        # random injective port -> spine assignment
+        spines = draw(st.permutations(range(SPEC.num_spines)))
+        maps[leaf] = {i: (spines[i], 0) for i in range(SPEC.gpus_per_leaf)}
+    return maps
+
+
+@settings(max_examples=200, deadline=None)
+@given(phase=leafwise_phase(), maps=random_port_maps())
+def test_lemma_5_1_any_source_routing(phase, maps):
+    assert is_leafwise_permutation(phase, SPEC)
+    sr = SourceRouting(SPEC, maps=maps)
+    rep = contention(phase, sr)
+    assert rep.is_contention_free, (
+        f"Lemma 5.1 violated: load {rep.max_load} on {phase}")
+
+
+@st.composite
+def arbitrary_permutation_phase(draw):
+    n = SPEC.num_gpus
+    size = draw(st.integers(2, n))
+    srcs = draw(st.permutations(range(n)))[:size]
+    dsts = draw(st.permutations(range(n)))[:size]
+    return [Flow(s, d, 1.0) for s, d in zip(srcs, dsts)]
+
+
+@settings(max_examples=200, deadline=None)
+@given(phase=arbitrary_permutation_phase())
+def test_source_routing_bounds_contention_by_leaf_count(phase):
+    """§5.3: even for non-conforming permutations, SR bounds worst-case
+    link load by L (vs L·S under ECMP)."""
+    sr = SourceRouting(SPEC)
+    rep = contention(phase, sr)
+    assert rep.max_load <= SPEC.num_leafs
+
+
+@settings(max_examples=100, deadline=None)
+@given(phase=arbitrary_permutation_phase())
+def test_checker_soundness(phase):
+    """If the checker accepts a phase, default SR must be contention-free
+    (soundness of is_leafwise_permutation wrt Lemma 5.1)."""
+    if is_leafwise_permutation(phase, SPEC):
+        assert contention(phase, SourceRouting(SPEC)).is_contention_free
+
+
+def test_checker_rejects_colliding_leaf_targets():
+    per = SPEC.gpus_per_leaf
+    phase = [Flow(0 * per + 0, 2 * per + 0, 1.0),
+             Flow(1 * per + 0, 2 * per + 1, 1.0)]  # two leafs -> leaf 2
+    assert not is_leafwise_permutation(phase, SPEC)
+
+
+def test_checker_rejects_non_permutation():
+    phase = [Flow(0, 9, 1.0), Flow(0, 10, 1.0)]
+    assert not is_leafwise_permutation(phase, SPEC)

@@ -1,0 +1,101 @@
+"""Routing + contention accounting; Lemma 5.1 on canonical collectives."""
+
+import numpy as np
+import pytest
+
+from repro.core import traffic
+from repro.core.routing import (BalancedECMPRouting, ECMPRouting,
+                                IdealRouting, SourceRouting, contention,
+                                contention_histogram)
+from repro.core.topology import CLUSTER512, TESTBED32, ClusterSpec
+from repro.core.traffic import Flow
+
+
+def test_source_routing_injective_per_leaf():
+    spec = CLUSTER512
+    sr = SourceRouting(spec)
+    for leaf, m in sr.maps.items():
+        ups = list(m.values())
+        assert len(set(ups)) == len(ups), f"leaf {leaf} map not injective"
+
+
+def test_local_flows_use_no_fabric():
+    spec = CLUSTER512
+    sr = SourceRouting(spec)
+    assert sr.route(Flow(0, 1, 1.0)) == []          # same server
+    assert sr.route(Flow(0, 31, 1.0)) == []         # same leaf
+    assert len(sr.route(Flow(0, 32, 1.0))) == 2     # cross leaf: up + down
+
+
+@pytest.mark.parametrize("algo,n", [
+    ("ring", 64), ("ring", 96), ("hd", 64), ("hd", 128),
+    ("pipeline", 64)])
+def test_lemma51_contention_free(algo, n):
+    """Ring/HD/pipeline on leaf-contiguous ranks never contend under SR."""
+    spec = CLUSTER512
+    sr = SourceRouting(spec)
+    ranks = list(range(n))
+    gen = {"ring": traffic.ring_allreduce,
+           "hd": traffic.halving_doubling_allreduce,
+           "pipeline": traffic.pipeline_p2p}[algo]
+    for phase in gen(ranks, 1.0):
+        rep = contention(phase, sr)
+        assert rep.is_contention_free, f"{algo} phase contends: {rep.max_load}"
+
+
+@pytest.mark.parametrize("n", [64, 96, 128])
+def test_alltoall_contention_free_under_source_routing(n):
+    """§5.3: pairwise AlltoAll is contention-free under canonical SR even
+    though some phases are not Definition-1 (two src leafs may target one
+    dst leaf through provably distinct spines)."""
+    spec = CLUSTER512
+    sr = SourceRouting(spec)
+    for phase in traffic.pairwise_alltoall(list(range(n)), 1.0):
+        assert contention(phase, sr).is_contention_free
+
+
+def test_ecmp_collides_sometimes():
+    """Hash collision must appear with non-trivial probability (§3.1).
+
+    Ring's 1-flow-per-leaf boundary cannot self-collide; HD's cross-leaf
+    steps put 32 concurrent flows on each leaf's 32 uplinks — the birthday
+    bound makes ECMP collide in nearly every trial (paper: ≥31.5% even with
+    the best hash-mode/factor combination)."""
+    spec = CLUSTER512
+    collided = 0
+    trials = 30
+    phases = traffic.halving_doubling_allreduce(list(range(128)), 1.0)
+    for seed in range(trials):
+        ecmp = ECMPRouting(spec, seed=seed)
+        if any(not contention(p, ecmp).is_contention_free for p in phases):
+            collided += 1
+    assert collided > trials * 0.3
+
+
+def test_balanced_better_than_ecmp():
+    spec = CLUSTER512
+    phase = traffic.ring_allreduce(list(range(256)), 1.0)[0]
+    worst_b = 0
+    worst_e = 0
+    for seed in range(10):
+        b = BalancedECMPRouting(spec, seed=seed)
+        e = ECMPRouting(spec, seed=seed)
+        worst_b = max(worst_b, contention(phase, b).max_load)
+        worst_e = max(worst_e, contention(phase, e).max_load)
+    assert worst_b <= worst_e
+
+
+def test_ideal_routing_never_contends():
+    spec = CLUSTER512
+    ideal = IdealRouting(spec)
+    phase = [Flow(i, (i + 7) % 512, 1.0) for i in range(512)]
+    assert contention(phase, ideal).is_contention_free
+
+
+def test_contention_histogram():
+    spec = CLUSTER512
+    ecmp = ECMPRouting(spec, seed=3)
+    phase = traffic.ring_allreduce(list(range(256)), 1.0)[0]
+    hist = contention_histogram(phase, ecmp)
+    # cross-leaf flows only: 8 boundary flows out of 256
+    assert sum(hist.values()) == 8

@@ -1,0 +1,84 @@
+"""Serving: decode_step must reproduce teacher-forced forward logits."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import transformer as T
+from repro.serve.decode import decode_step, prefill
+from repro.serve.kv_cache import init_decode_state
+
+DECODE_ARCHS = ["tinyllama-1.1b", "qwen1.5-32b", "deepseek-moe-16b",
+                "mixtral-8x22b", "rwkv6-3b", "zamba2-2.7b", "whisper-base"]
+
+
+def _mk(arch, **kw):
+    base = get_config(arch)
+    if base.family == "moe":
+        # high capacity factor: teacher-forced forward drops over-capacity
+        # tokens while one-token decode never does — a real (documented)
+        # train/serve asymmetry of capacity-based MoE, not what we test here
+        kw.setdefault("moe_capacity_factor", 16.0)
+    cfg = reduced(base, num_layers=4 if base.family == "hybrid" else 2, **kw)
+    params = T.init_lm(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_decode_matches_forward(arch):
+    cfg, params = _mk(arch)
+    b, s = 2, 16
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    kwargs = {}
+    if cfg.frontend == "frames":
+        kwargs["frame_embeds"] = jnp.full((b, s, cfg.d_model), 0.01,
+                                          jnp.float32)
+    full_logits, _ = T.forward(params, cfg, toks, **kwargs)
+    logits, state = prefill(params, cfg, toks, max_len=32,
+                            frame_embeds=kwargs.get("frame_embeds"))
+    # the last prefill step's logits must match forward's last position
+    np.testing.assert_allclose(
+        np.asarray(logits[:, 0], np.float32),
+        np.asarray(full_logits[:, -1], np.float32), atol=0.15, rtol=0.05)
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "rwkv6-3b"])
+def test_decode_continues_consistently(arch):
+    """Greedy continuation from decode equals teacher-forced argmax chain."""
+    cfg, params = _mk(arch)
+    b, s = 1, 12
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    logits, state = prefill(params, cfg, toks, max_len=32)
+    nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    # teacher-forced: run forward on toks + nxt
+    full, _ = T.forward(params, cfg, jnp.concatenate([toks, nxt], axis=1))
+    d_logits, state = decode_step(params, cfg, nxt, state)
+    np.testing.assert_allclose(np.asarray(d_logits[:, 0], np.float32),
+                               np.asarray(full[:, -1], np.float32),
+                               atol=0.15, rtol=0.05)
+
+
+def test_swa_rolling_cache():
+    cfg, params = _mk("mixtral-8x22b", sliding_window=8)
+    b = 1
+    state = init_decode_state(cfg, b, max_len=64, dtype=jnp.float32)
+    assert state["k_cache"].shape[2] == 8  # rolling window, not 64
+    rng = np.random.default_rng(3)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, 1)), jnp.int32)
+    for _ in range(12):  # wrap the ring twice
+        logits, state = decode_step(params, cfg, tok, state)
+    assert int(state["cache_len"]) == 12
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+def test_ssm_state_constant_memory():
+    """RWKV decode state is O(1) in context length — the long_500k story."""
+    cfg, params = _mk("rwkv6-3b")
+    s1 = init_decode_state(cfg, 1, max_len=128)
+    s2 = init_decode_state(cfg, 1, max_len=1 << 19)
+    sz = lambda st: sum(np.prod(v.shape) for v in jax.tree_util.tree_leaves(st))
+    assert sz(s1) == sz(s2)

@@ -1,0 +1,70 @@
+"""Fabric model invariants: id mapping, capacity, OCS wiring."""
+
+import pytest
+
+from repro.core.topology import (CLUSTER512, CLUSTER512_OCS, CLUSTER2048,
+                                 TESTBED32, ClusterSpec, FabricState,
+                                 OCSLayer)
+
+
+def test_cluster_sizes_match_paper():
+    assert CLUSTER512.num_gpus == 512
+    assert CLUSTER2048.num_gpus == 2048
+    assert TESTBED32.num_gpus == 32
+
+
+def test_id_mapping_roundtrip():
+    s = CLUSTER512
+    for g in (0, 7, 8, 31, 32, 511):
+        leaf = s.leaf_of_gpu(g)
+        assert g in [gg for sv in s.servers_of_leaf(leaf)
+                     for gg in s.gpus_of_server(sv)]
+        assert s.leaf_of_server(s.server_of_gpu(g)) == leaf
+
+
+def test_full_bisection():
+    s = CLUSTER512
+    # uplinks per leaf == server-facing ports per leaf
+    assert s.uplinks_per_leaf == s.gpus_per_leaf
+    # spine downlinks sum == leaf uplinks sum
+    assert s.num_spines * s.downlinks_per_spine == \
+        s.num_leafs * s.uplinks_per_leaf
+
+
+@pytest.mark.parametrize("spec", [CLUSTER512_OCS,
+                                  ClusterSpec(num_leafs=64, num_spines=32,
+                                              gpus_per_leaf=32,
+                                              gpus_per_server=8, num_ocs=32)])
+def test_ocs_default_wiring_uniform(spec):
+    st = FabricState(spec)
+    cap = st.capacity()
+    assert all(c == spec.base_channels for row in cap for c in row)
+
+
+def test_ocs_port_budget():
+    spec = CLUSTER512_OCS
+    layer = OCSLayer(spec)
+    for k in range(spec.num_ocs):
+        lports = layer.leaf_ports(k)
+        sports = layer.spine_ports(k)
+        assert len(lports) == len(sports)
+        # every circuit endpoint valid and unique
+        used = list(layer.circuits[k].values())
+        assert len(used) == len(set(used))
+        assert all(0 <= sp < len(sports) for sp in used)
+
+
+def test_reservation_rejects_overcommit():
+    st = FabricState(CLUSTER512)
+    st.reserve_links(0, {(0, 0): 1})
+    with pytest.raises(ValueError):
+        st.reserve_links(1, {(0, 0): 1})
+    st.release_job(0)
+    st.reserve_links(1, {(0, 0): 1})
+
+
+def test_gpu_double_allocation_rejected():
+    st = FabricState(CLUSTER512)
+    st.allocate_gpus(0, [0, 1, 2])
+    with pytest.raises(ValueError):
+        st.allocate_gpus(1, [2, 3])

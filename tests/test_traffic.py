@@ -1,0 +1,86 @@
+"""Collective traffic generators: correctness of the executable schedules
+and conformance of the flow patterns (paper §5.3)."""
+
+import numpy as np
+import pytest
+
+from repro.core import traffic
+from repro.core.topology import CLUSTER512
+from repro.core.patterns import is_leafwise_permutation
+
+
+@pytest.mark.parametrize("n", [2, 3, 4, 7, 8, 12, 16])
+def test_ring_allreduce_computes_sum(n):
+    rng = np.random.default_rng(n)
+    bufs = [rng.normal(size=40) for _ in range(n)]
+    want = np.sum(bufs, axis=0)
+    got = traffic.run_ring_allreduce(bufs)
+    for g in got:
+        np.testing.assert_allclose(g, want, rtol=1e-12)
+
+
+@pytest.mark.parametrize("n", [2, 3, 4, 6, 8, 13, 16])
+def test_hd_allreduce_computes_sum(n):
+    rng = np.random.default_rng(n)
+    bufs = [rng.normal(size=64) for _ in range(n)]
+    want = np.sum(bufs, axis=0)
+    got = traffic.run_halving_doubling_allreduce(bufs)
+    for i, g in enumerate(got):
+        np.testing.assert_allclose(g, want, rtol=1e-12, err_msg=f"rank {i}")
+
+
+@pytest.mark.parametrize("n", [2, 4, 8])
+def test_alltoall_exchange(n):
+    bufs = [np.arange(n * 4) + 100 * i for i in range(n)]
+    got = traffic.run_pairwise_alltoall(bufs)
+    for j in range(n):
+        want = np.concatenate([np.array_split(bufs[i], n)[j]
+                               for i in range(n)])
+        np.testing.assert_array_equal(got[j], want)
+
+
+def test_ring_phase_structure():
+    phases = traffic.ring_allreduce(list(range(8)), 800.0)
+    assert len(phases) == 2 * 7
+    for p in phases:
+        assert len(p) == 8
+        assert all(abs(f.nbytes - 100.0) < 1e-9 for f in p)
+
+
+def test_hd_phase_sizes_halve():
+    phases = traffic.halving_doubling_allreduce(list(range(8)), 1024.0)
+    rs = [p[0].nbytes for p in phases[:3]]
+    assert rs == [512.0, 256.0, 128.0]
+    ag = [p[0].nbytes for p in phases[3:]]
+    assert ag == [128.0, 256.0, 512.0]
+
+
+def test_hd_nonpow2_has_fold_steps():
+    phases = traffic.halving_doubling_allreduce(list(range(6)), 1.0)
+    # pre-fold: ranks 0,1 -> 4,5; post: 4,5 -> 0,1
+    assert {(f.src, f.dst) for f in phases[0]} == {(0, 4), (1, 5)}
+    assert {(f.src, f.dst) for f in phases[-1]} == {(4, 0), (5, 1)}
+
+
+def test_pipeline_p2p():
+    fwd = traffic.pipeline_p2p(list(range(4)), 7.0)
+    assert [(f.src, f.dst) for f in fwd[0]] == [(0, 1), (1, 2), (2, 3)]
+    bwd = traffic.pipeline_p2p(list(range(4)), 7.0, backward=True)
+    assert [(f.src, f.dst) for f in bwd[0]] == [(1, 0), (2, 1), (3, 2)]
+
+
+def test_ring_phases_are_leafwise_on_contiguous_ranks():
+    spec = CLUSTER512
+    ranks = list(range(96))  # three leafs
+    for p in traffic.ring_allreduce(ranks, 1.0)[:1]:
+        assert is_leafwise_permutation(p, spec)
+    for p in traffic.halving_doubling_allreduce(ranks[:64], 1.0):
+        assert is_leafwise_permutation(p, spec)
+    for p in traffic.pipeline_p2p(ranks, 1.0):
+        assert is_leafwise_permutation(p, spec)
+
+
+def test_double_binary_tree_not_leafwise():
+    spec = CLUSTER512
+    phases = traffic.double_binary_tree_allreduce(list(range(128)), 1.0)
+    assert not all(is_leafwise_permutation(p, spec) for p in phases)
