@@ -1,0 +1,19 @@
+# Developer entry points. The repo runs from source: PYTHONPATH=src.
+PY ?= python
+export PYTHONPATH := src
+
+.PHONY: test bench-smoke bench docs-lint check
+
+test:            ## tier-1 verification (what CI gates on)
+	$(PY) -m pytest -x -q
+
+bench-smoke:     ## ~30s campaign smoke: engine speedup + JCT identity
+	$(PY) -m benchmarks.bench_campaign
+
+bench:           ## every paper table/figure benchmark
+	$(PY) -m benchmarks.run
+
+docs-lint:       ## README/docs stay honest against the code
+	$(PY) scripts/docs_lint.py
+
+check: docs-lint test   ## lint + tests

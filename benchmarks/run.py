@@ -21,6 +21,7 @@ MODULES = [
     ("table5", "benchmarks.bench_table5_lambda"),
     ("table6", "benchmarks.bench_table6_sched"),
     ("table7", "benchmarks.bench_table7_dist"),
+    ("campaign", "benchmarks.bench_campaign"),
     ("roofline", "benchmarks.roofline"),
 ]
 

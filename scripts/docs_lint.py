@@ -1,0 +1,86 @@
+#!/usr/bin/env python
+"""Documentation lint: keep README/docs honest against the code.
+
+Checks:
+  1. required docs exist (README.md, docs/architecture.md, docs/simulator.md)
+  2. every `src/...` path mentioned in them exists on disk
+  3. relative markdown links resolve
+  4. the README strategy glossary covers every simulator strategy
+  5. fenced ``python`` snippets in the docs at least compile
+
+Run: python scripts/docs_lint.py   (or: make docs-lint)
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOCS = ["README.md", "docs/architecture.md", "docs/simulator.md"]
+
+errors: list[str] = []
+
+
+def check(cond: bool, msg: str) -> None:
+    if not cond:
+        errors.append(msg)
+
+
+def main() -> int:
+    texts = {}
+    for rel in DOCS:
+        path = ROOT / rel
+        check(path.exists(), f"missing required doc: {rel}")
+        if path.exists():
+            texts[rel] = path.read_text()
+
+    # 2. referenced source paths exist
+    for rel, text in texts.items():
+        for m in re.finditer(r"`((?:src|benchmarks|examples|tests|scripts)"
+                             r"/[\w/.-]+\.(?:py|md))`", text):
+            check((ROOT / m.group(1)).exists(),
+                  f"{rel}: dangling path reference `{m.group(1)}`")
+
+    # 3. relative markdown links resolve
+    for rel, text in texts.items():
+        base = (ROOT / rel).parent
+        for m in re.finditer(r"\]\((?!https?://|#)([^)]+?)(?:#[^)]*)?\)", text):
+            target = m.group(1)
+            check((base / target).exists() or (ROOT / target).exists(),
+                  f"{rel}: broken link -> {target}")
+
+    # 4. strategy glossary is complete
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.core.simulator import STRATEGIES
+    from repro.core.scheduler import QUEUE_POLICIES
+    readme = texts.get("README.md", "")
+    for s in STRATEGIES:
+        check(f"`{s}`" in readme, f"README.md: strategy `{s}` missing "
+                                  f"from the glossary")
+    for q in QUEUE_POLICIES:
+        check(f"`{q}`" in readme, f"README.md: queueing policy `{q}` "
+                                  f"missing")
+
+    # 5. python snippets compile
+    for rel, text in texts.items():
+        for i, m in enumerate(re.finditer(r"```python\n(.*?)```", text,
+                                          re.DOTALL)):
+            try:
+                compile(m.group(1), f"{rel}[snippet {i}]", "exec")
+            except SyntaxError as e:
+                check(False, f"{rel}: snippet {i} does not compile: {e}")
+
+    if errors:
+        print("docs-lint: FAILED")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    n_snippets = sum(len(re.findall(r"```python", t)) for t in texts.values())
+    print(f"docs-lint: OK ({len(texts)} docs, {n_snippets} snippets)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,10 +9,12 @@ Layers:
   ocs        — OCS-vClos stages + rewiring planner (Algorithm 2/4)
   fairshare  — max-min fair water-filling (numpy + JAX)
   jobs       — DML workload profiles + dataset generators
-  simulator  — event-driven flow-level cluster simulator (RapidNetSim-style)
+  workloads  — reproducible Poisson/CSV arrival traces for campaigns
+  simulator  — event-driven flow-level cluster simulator (incremental rates)
+  campaign   — strategy × policy × load × seed sweep driver + aggregation
   scheduler  — online scheduler facade for the training launcher
   rankmap    — vClos placement -> JAX mesh device order
-  metrics    — JRT / JWT / JCT / Stability
+  metrics    — JRT / JWT / JCT / Stability (+ CDF helpers)
 """
 
 from .topology import (CLUSTER512, CLUSTER512_OCS, CLUSTER2048,
@@ -30,10 +32,14 @@ from .placement import (Placement, PlacementFailure, VirtualClos, commit,
 from .ocs import RewirePlanner, ocs_release, ocs_vclos_place
 from .fairshare import maxmin_fair, maxmin_fair_jax, maxmin_fair_numpy
 from .jobs import (BATCHES, PROFILES, Job, ModelProfile, cluster_dataset,
-                   testbed_dataset, HELIOS_SIZE_MIX, TPUV4_SIZE_MIX)
-from .metrics import MetricsReport, job_metrics
-from .simulator import ClusterSimulator, simulate
-from .scheduler import Grant, IsolatedScheduler
+                   testbed_dataset, weighted_choice, HELIOS_SIZE_MIX,
+                   TPUV4_SIZE_MIX)
+from .workloads import (SIZE_MIXES, WorkloadSpec, generate_trace, load_trace_csv,
+                        poisson_trace, save_trace_csv, trace_stats)
+from .metrics import MetricsReport, cdf, job_metrics
+from .simulator import STRATEGIES, ClusterSimulator, simulate
+from .campaign import (CampaignGrid, CampaignResult, CellResult, run_campaign)
+from .scheduler import (Grant, IsolatedScheduler, QUEUE_POLICIES, order_queue)
 from .rankmap import leaf_contiguous_order, mesh_device_order
 
 __all__ = [name for name in dir() if not name.startswith("_")]

@@ -1,0 +1,243 @@
+"""Trace-driven simulation campaigns: strategy × policy × load × seed sweeps.
+
+The paper's large-scale results (§9, Tables 5-7, Fig. 12/13) are grids: every
+routing/placement strategy crossed with queueing policies, offered loads (λ)
+and random seeds, aggregated into JCT/JWT tables and CDFs. This module is
+that machinery as a library:
+
+    grid = CampaignGrid(strategies=("ecmp", "sr", "vclos"),
+                        loads=(200.0, 120.0), seeds=(0, 1, 2))
+    result = run_campaign(CLUSTER512, grid,
+                          workload=WorkloadSpec(num_jobs=500))
+    for row in result.aggregate():
+        print(row)
+
+Each grid cell runs the event-driven simulator on the *same* trace (per
+load × seed), so strategy columns are paired samples. ``run_campaign`` also
+accepts a fixed external trace (e.g. loaded via
+:func:`repro.core.workloads.load_trace_csv`) instead of a synthetic
+workload spec. CLI: ``python -m repro.launch.sweep campaign --help``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .jobs import Job
+from .metrics import MetricsReport, cdf
+from .simulator import STRATEGIES, simulate
+from .scheduler import QUEUE_POLICIES
+from .topology import ClusterSpec
+from .workloads import WorkloadSpec, generate_trace, trace_stats
+
+
+@dataclass(frozen=True)
+class CampaignGrid:
+    """The swept axes. ``loads`` are mean inter-arrival gaps λ in seconds
+    (smaller = heavier offered load); ``schedulers`` are queueing policies."""
+
+    strategies: Tuple[str, ...] = ("best", "vclos", "sr", "ecmp")
+    schedulers: Tuple[str, ...] = ("fifo",)
+    loads: Tuple[float, ...] = (120.0,)
+    seeds: Tuple[int, ...] = (0,)
+
+    def __post_init__(self) -> None:
+        for axis in ("strategies", "schedulers", "loads", "seeds"):
+            if not getattr(self, axis):
+                raise ValueError(f"campaign grid axis {axis!r} is empty")
+        for s in self.strategies:
+            if s not in STRATEGIES:
+                raise ValueError(f"unknown strategy {s!r}")
+        for q in self.schedulers:
+            if q not in QUEUE_POLICIES:
+                raise ValueError(f"unknown queueing policy {q!r}")
+
+    def cells(self):
+        for load in self.loads:
+            for seed in self.seeds:
+                for sched in self.schedulers:
+                    for strat in self.strategies:
+                        yield strat, sched, load, seed
+
+    @property
+    def size(self) -> int:
+        return (len(self.strategies) * len(self.schedulers)
+                * len(self.loads) * len(self.seeds))
+
+
+@dataclass
+class CellResult:
+    """One simulated grid cell."""
+
+    strategy: str
+    scheduler: str
+    load: float
+    seed: int
+    report: MetricsReport
+    wall_time: float            # seconds spent simulating this cell
+
+    def key(self) -> Tuple[str, str, float]:
+        return (self.strategy, self.scheduler, self.load)
+
+
+@dataclass
+class CampaignResult:
+    spec: ClusterSpec
+    grid: CampaignGrid
+    cells: List[CellResult] = field(default_factory=list)
+    # one stats entry per simulated trace, keyed "load=<λ>,seed=<s>"
+    trace_info: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    wall_time: float = 0.0
+
+    # -- aggregation --------------------------------------------------------
+    def aggregate(self) -> List[Dict[str, float]]:
+        """One row per (strategy, scheduler, load), pooled across seeds:
+        JCT mean/p99, queueing delay (JWT) mean/p99, makespan, contention
+        ratio mean, fragmentation counts."""
+        groups: Dict[Tuple[str, str, float], List[CellResult]] = {}
+        for c in self.cells:
+            groups.setdefault(c.key(), []).append(c)
+        rows = []
+        for (strat, sched, load), cells in sorted(groups.items()):
+            # pool only real samples — a cell that finished nothing adds no
+            # phantom 0.0; a fully-empty group reports 0.0 with n_finished=0
+            jcts = np.asarray([s for c in cells for s in c.report.jcts]
+                              or [0.0])
+            jwts = np.asarray([s for c in cells for s in c.report.jwts]
+                              or [0.0])
+            slow = [s for c in cells for s in c.report.slowdowns]
+            rows.append({
+                "strategy": strat, "scheduler": sched, "load": load,
+                "seeds": len(cells),
+                "n_finished": sum(c.report.n_finished for c in cells),
+                "jct_mean": float(jcts.mean()),
+                "jct_p99": float(np.percentile(jcts, 99)),
+                "queue_delay_mean": float(jwts.mean()),
+                "queue_delay_p99": float(np.percentile(jwts, 99)),
+                "makespan_mean": float(np.mean([c.report.makespan
+                                                for c in cells])),
+                "contention_ratio_mean": float(np.mean(slow)) if slow else 1.0,
+                "frag_gpu": sum(c.report.frag_gpu for c in cells),
+                "frag_network": sum(c.report.frag_network for c in cells),
+                "sim_seconds": float(sum(c.wall_time for c in cells)),
+            })
+        return rows
+
+    def _pooled_cdf(self, attr: str, strategy: str,
+                    scheduler: Optional[str], load: Optional[float],
+                    num_points: int) -> List[List[float]]:
+        samples = [s for c in self.cells
+                   if c.strategy == strategy
+                   and (scheduler is None or c.scheduler == scheduler)
+                   and (load is None or c.load == load)
+                   for s in getattr(c.report, attr)]
+        return cdf(samples, num_points)
+
+    def contention_cdf(self, strategy: str, scheduler: Optional[str] = None,
+                       load: Optional[float] = None,
+                       num_points: int = 50) -> List[List[float]]:
+        """Pooled contention-ratio (JRT / ideal JRT) CDF for one strategy,
+        optionally restricted to a scheduler / load slice."""
+        return self._pooled_cdf("slowdowns", strategy, scheduler, load,
+                                num_points)
+
+    def jct_cdf(self, strategy: str, scheduler: Optional[str] = None,
+                load: Optional[float] = None,
+                num_points: int = 50) -> List[List[float]]:
+        return self._pooled_cdf("jcts", strategy, scheduler, load,
+                                num_points)
+
+    # -- serialisation ------------------------------------------------------
+    def to_json(self) -> Dict:
+        return {
+            "cluster": {"num_gpus": self.spec.num_gpus,
+                        "num_leafs": self.spec.num_leafs,
+                        "num_spines": self.spec.num_spines,
+                        "num_ocs": self.spec.num_ocs},
+            "grid": dataclasses.asdict(self.grid),
+            "trace": self.trace_info,
+            "wall_time": self.wall_time,
+            "table": self.aggregate(),
+            "contention_cdfs": {s: self.contention_cdf(s)
+                                for s in self.grid.strategies},
+            "jct_cdfs": {s: self.jct_cdf(s) for s in self.grid.strategies},
+        }
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1, sort_keys=True)
+
+
+def run_campaign(spec: ClusterSpec, grid: CampaignGrid,
+                 workload: Optional[WorkloadSpec] = None,
+                 trace: Optional[Sequence[Job]] = None,
+                 incremental: bool = True,
+                 ilp_time_limit: float = 2.0,
+                 ocs_spec: Optional[ClusterSpec] = None,
+                 progress: Optional[Callable[[str], None]] = None,
+                 ) -> CampaignResult:
+    """Sweep every grid cell over a shared trace and aggregate the metrics.
+
+    Traces are regenerated per (load, seed) from ``workload`` — strategies
+    and schedulers within a (load, seed) slice always see the identical job
+    list, so their columns are directly comparable. When an explicit
+    ``trace`` is passed instead, the ``loads`` axis must be a single entry
+    (the trace fixes the arrival process) and seeds only vary the
+    simulator's internal randomness (ECMP hashing, relaxed placement).
+
+    ``ocs_spec`` — cluster used for ``ocs-vclos`` / ``ocs-relax`` cells
+    (defaults to ``spec``; pass the ``*_OCS`` preset so those strategies
+    have circuits to rewire).
+    """
+    if trace is not None and len(grid.loads) > 1:
+        raise ValueError("an explicit trace fixes the arrival process; "
+                         "use a single-entry loads axis")
+    if "ocs-vclos" in grid.strategies:
+        eff = ocs_spec if ocs_spec is not None else spec
+        if not eff.num_ocs:
+            raise ValueError(
+                "ocs-vclos needs an OCS-equipped cluster: pass ocs_spec= "
+                "(e.g. CLUSTER512_OCS) or a spec with num_ocs > 0")
+    if trace is not None:
+        uses_ocs_spec = (ocs_spec is not None and
+                         any(s.startswith("ocs") for s in grid.strategies))
+        limit = min([spec.num_gpus]
+                    + ([ocs_spec.num_gpus] if uses_ocs_spec else []))
+        for j in trace:
+            if j.num_gpus > limit:
+                raise ValueError(
+                    f"trace job {j.job_id} wants {j.num_gpus} GPUs but the "
+                    f"cluster has {limit}; it could never be placed and "
+                    f"would starve FIFO campaigns")
+    if workload is None:
+        workload = WorkloadSpec(num_jobs=500, max_gpus=spec.num_gpus)
+    result = CampaignResult(spec=spec, grid=grid)
+    t0 = time.time()
+    traces: Dict[Tuple[float, int], List[Job]] = {}
+    for strat, sched, load, seed in grid.cells():
+        tkey = (load, seed)
+        if tkey not in traces:
+            traces[tkey] = (list(trace) if trace is not None else
+                            generate_trace(workload.with_load(load).with_seed(seed)))
+            result.trace_info[f"load={load:g},seed={seed}"] = \
+                trace_stats(traces[tkey])
+        cell_spec = ocs_spec if (ocs_spec is not None and
+                                 strat.startswith("ocs")) else spec
+        tc = time.time()
+        rep = simulate(cell_spec, traces[tkey], strat, scheduler=sched,
+                       seed=seed, ilp_time_limit=ilp_time_limit,
+                       incremental=incremental)
+        dt = time.time() - tc
+        result.cells.append(CellResult(strat, sched, load, seed, rep, dt))
+        if progress is not None:
+            progress(f"[campaign] {strat}/{sched} λ={load:g} seed={seed}: "
+                     f"JCT {rep.avg_jct:.1f}s (n={rep.n_finished}) "
+                     f"in {dt:.2f}s")
+    result.wall_time = time.time() - t0
+    return result

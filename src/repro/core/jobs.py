@@ -116,7 +116,13 @@ class Job:
         flow moves across the whole collective so one representative phase
         stands for all identical rounds (ring) while multi-step collectives
         (HD, AlltoAll) keep one phase per distinct pattern."""
-        ar, a2a = self.comm_bytes()
+        return self.ar_phases(ranks) + self.a2a_phases(ranks)
+
+    def ar_phases(self, ranks: Sequence[int]) -> List[Tuple[str, Phase]]:
+        """The allreduce phases of :meth:`phases` (split out so the
+        simulator can synthesise AlltoAll link loads without materialising
+        every per-step Flow object)."""
+        ar, _ = self.comm_bytes()
         p = self.profile
         out: List[Tuple[str, Phase]] = []
         if len(ranks) < 2:
@@ -142,18 +148,90 @@ class Job:
                 # single phase whose per-flow bytes are the whole AR volume
                 out.append(("ar", [Flow(ranks[i], ranks[(i + 1) % n], ar)
                                    for i in range(n)]))
-        if a2a > 0:
-            out.extend(("a2a", ph) for ph in
-                       traffic.pairwise_alltoall(ranks, p.alltoall_bytes))
         return out
 
+    def ar_phase_arrays(self, ranks: Sequence[int]):
+        """Vectorized twin of :meth:`ar_phases`: per-phase ``(kind, nbytes)``
+        metadata plus concatenated ``(src, dst, phase_idx)`` GPU-id arrays,
+        mirroring the Flow-level generators exactly (same phases, same flow
+        sets, same per-flow byte counts) without materialising Flow objects.
+        """
+        ar, _ = self.comm_bytes()
+        p = self.profile
+        metas: List[Tuple[str, float]] = []
+        srcs: List[np.ndarray] = []
+        dsts: List[np.ndarray] = []
+        n = len(ranks)
+        empty = (np.empty(0, dtype=np.int64),) * 3
+        if n < 2 or ar <= 0:
+            return metas, *empty
+        r = np.asarray(ranks, dtype=np.int64)
+        if self.allreduce_algo == "hd":
+            pow2 = 1 << int(math.floor(math.log2(n)))
+            extra = n - pow2
+            if extra:  # pre-fold: rank i -> rank i + pow2
+                metas.append(("ar", p.param_bytes))
+                srcs.append(r[:extra])
+                dsts.append(r[pow2:])
+            core = r[extra:]
+            idx = np.arange(pow2)
+            sz = p.param_bytes / 2
+            steps = int(math.log2(pow2))
+            for t in range(steps):           # reduce-scatter, halving
+                metas.append(("ar", sz))
+                srcs.append(core)
+                dsts.append(core[idx ^ (1 << t)])
+                sz /= 2
+            sz = p.param_bytes / pow2
+            for t in reversed(range(steps)):  # all-gather, doubling
+                metas.append(("ar", sz))
+                srcs.append(core)
+                dsts.append(core[idx ^ (1 << t)])
+                sz *= 2
+            if extra:  # post-fold back
+                metas.append(("ar", p.param_bytes))
+                srcs.append(r[pow2:])
+                dsts.append(r[:extra])
+        elif self.allreduce_algo == "hierarchical_ring":
+            group = 8
+            leaders = (r[::group] if n > group and n % group == 0 else r)
+            m = len(leaders)
+            if m > 1:
+                metas.append(("ar", 2.0 * p.param_bytes * (m - 1) / m))
+                srcs.append(leaders)
+                dsts.append(np.roll(leaders, -1))
+            else:
+                metas.append(("ar", 0.0))
+        else:  # ring: one collapsed phase carrying the whole AR volume
+            metas.append(("ar", ar))
+            srcs.append(r)
+            dsts.append(np.roll(r, -1))
+        if not srcs:
+            return metas, *empty
+        phase_idx = np.repeat(np.arange(len(srcs), dtype=np.int64),
+                              [len(s) for s in srcs])
+        return metas, np.concatenate(srcs), np.concatenate(dsts), phase_idx
+
+    def a2a_phases(self, ranks: Sequence[int]) -> List[Tuple[str, Phase]]:
+        """The AlltoAll phases of :meth:`phases` (N-1 pairwise steps)."""
+        _, a2a = self.comm_bytes()
+        if len(ranks) < 2 or a2a <= 0:
+            return []
+        return [("a2a", ph) for ph in
+                traffic.pairwise_alltoall(ranks, self.profile.alltoall_bytes)]
+
 
 # ---------------------------------------------------------------------------
-# Dataset generators
+# Dataset generators — the fixed paper datasets. For parameterised /
+# CSV-backed campaign traces see ``repro.core.workloads``.
 # ---------------------------------------------------------------------------
 
-def _choice(rng: np.random.Generator, items, probs):
+def weighted_choice(rng: np.random.Generator, items, probs):
+    """One draw from ``items`` with (unnormalised) weights ``probs``."""
     return items[rng.choice(len(items), p=np.asarray(probs) / np.sum(probs))]
+
+
+_choice = weighted_choice  # internal alias kept for draw-order parity
 
 
 def testbed_dataset(num_jobs: int = 100, seed: int = 0,
@@ -192,28 +270,18 @@ def cluster_dataset(num_jobs: int = 5000, lam: float = 120.0, seed: int = 0,
                     size_mix: Optional[List[Tuple[int, float]]] = None,
                     max_gpus: Optional[int] = None,
                     with_deadlines: bool = False) -> List[Job]:
-    """Helios-derived mix (§9.2): Poisson arrivals with mean gap ``lam``."""
-    rng = np.random.default_rng(seed)
-    mix = size_mix or HELIOS_SIZE_MIX
-    sizes = [s for s, _ in mix]
-    probs = [p for _, p in mix]
-    models = list(PROFILES)
-    jobs: List[Job] = []
-    t = 0.0
-    for i in range(num_jobs):
-        n = int(_choice(rng, sizes, probs))
-        if max_gpus:
-            n = min(n, max_gpus)
-        model = models[rng.integers(len(models))]
-        batch = int(BATCHES[model][rng.integers(len(BATCHES[model]))])
-        algo = ["ring", "hierarchical_ring", "hd"][rng.integers(3)]
-        # Helios-like heavy-tailed durations tuned so the offered load at the
-        # paper's λ=120s sits just below saturation for `best` (ρ≈0.9) — the
-        # regime where ECMP's contention slowdown tips the queue over (§9.4)
-        iters = int(rng.lognormal(mean=8.8, sigma=1.1))
-        t += rng.exponential(lam)
-        job = Job(i, model, n, batch, t, max(iters, 50), allreduce_algo=algo)
-        if with_deadlines:
-            job.deadline = t + job.ideal_runtime() * float(rng.uniform(1.5, 4.0))
-        jobs.append(job)
-    return jobs
+    """Helios-derived mix (§9.2): Poisson arrivals with mean gap ``lam``.
+
+    Thin wrapper over ``workloads.generate_trace`` (one copy of the draw
+    sequence).  The lognormal(8.8, 1.1) durations are tuned so the offered
+    load at the paper's λ=120s sits just below saturation for `best`
+    (ρ≈0.9) — the regime where ECMP's contention slowdown tips the queue
+    over (§9.4).
+    """
+    from .workloads import WorkloadSpec, generate_trace
+    return generate_trace(WorkloadSpec(
+        num_jobs=num_jobs, mean_interarrival=lam, seed=seed,
+        size_mix=tuple((int(s), float(p)) for s, p in size_mix)
+        if size_mix is not None else "helios",
+        max_gpus=max_gpus,
+        deadline_slack=(1.5, 4.0) if with_deadlines else None))

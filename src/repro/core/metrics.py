@@ -1,9 +1,15 @@
-"""Cluster performance metrics (paper §9.3): JRT, JWT, JCT, Stability."""
+"""Cluster performance metrics (paper §9.3): JRT, JWT, JCT, Stability.
+
+Besides the paper's headline averages, :class:`MetricsReport` carries the
+per-job arrays (``jcts``, ``jwts``, ``slowdowns``) that the campaign engine
+(:mod:`repro.core.campaign`) pools across seeds into mean/p99 tables and
+contention-ratio CDFs.
+"""
 
 from __future__ import annotations
 
 from collections import defaultdict
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -21,6 +27,14 @@ class MetricsReport:
     n_finished: int
     frag_gpu: int = 0           # jobs blocked by GPU shortage (Table 2)
     frag_network: int = 0       # jobs blocked by network fragmentation
+    p99_jct: float = 0.0
+    makespan: float = 0.0       # last finish − first arrival over finished jobs
+    # per-job samples (finished jobs only), for CDFs / cross-seed pooling
+    jcts: List[float] = field(default_factory=list, repr=False)
+    jwts: List[float] = field(default_factory=list, repr=False)
+    # contention ratio: actual JRT / contention-free JRT (1.0 = isolated);
+    # filled by the simulator, empty when the producer doesn't track rates
+    slowdowns: List[float] = field(default_factory=list, repr=False)
 
     def row(self) -> Dict[str, float]:
         return {
@@ -46,4 +60,22 @@ def job_metrics(jobs: Sequence[Job]) -> MetricsReport:
         avg_jrt=float(jrt.mean()), avg_jwt=float(jwt.mean()),
         avg_jct=float(jct.mean()),
         stability=float(np.mean(stds)) if stds else 0.0,
-        p99_jwt=float(np.percentile(jwt, 99)), n_finished=len(done))
+        p99_jwt=float(np.percentile(jwt, 99)), n_finished=len(done),
+        p99_jct=float(np.percentile(jct, 99)),
+        makespan=float(max(j.finish_time for j in done)
+                       - min(j.arrival for j in done)),
+        jcts=[float(c) for c in jct], jwts=[float(w) for w in jwt])
+
+
+def cdf(samples: Sequence[float], num_points: int = 50) -> List[List[float]]:
+    """Empirical CDF of ``samples`` down-sampled to ``num_points`` rows of
+    ``[value, cumulative_fraction]`` — compact enough to embed in JSON."""
+    if not len(samples):
+        return []
+    xs = np.sort(np.asarray(samples, dtype=float))
+    n = len(xs)
+    if n <= num_points:
+        idx = np.arange(n)
+    else:
+        idx = np.unique(np.linspace(0, n - 1, num_points).astype(int))
+    return [[float(xs[i]), float((i + 1) / n)] for i in idx]

@@ -73,9 +73,9 @@ def _stage0_server(state: FabricState, job_id: int, n: int) -> Optional[Placemen
     spec = state.spec
     best: Optional[Tuple[int, int]] = None  # (idle_count, server)
     for sv in range(spec.num_servers):
-        idle = state.idle_gpus_of_server(sv)
-        if len(idle) >= n and (best is None or len(idle) < best[0]):
-            best = (len(idle), sv)
+        idle = state.server_free_gpus(sv)
+        if idle >= n and (best is None or idle < best[0]):
+            best = (idle, sv)
     if best is None:
         return None
     gpus = state.idle_gpus_of_server(best[1])[:n]

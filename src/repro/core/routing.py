@@ -20,6 +20,8 @@ from collections import Counter
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from .topology import ClusterSpec, Link
 from .traffic import Flow, Phase
 
@@ -46,6 +48,56 @@ def ecmp_hash(src: int, dst: int, flow_id: int, seed: int, nway: int) -> int:
     return h % nway
 
 
+def _mix64_vec(x: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`_mix64` over a uint64 array (wrap-around mul)."""
+    x = x.astype(np.uint64)
+    with np.errstate(over="ignore"):
+        x ^= x >> np.uint64(33)
+        x *= np.uint64(0xFF51AFD7ED558CCD)
+        x ^= x >> np.uint64(33)
+        x *= np.uint64(0xC4CEB9FE1A85EC53)
+        x ^= x >> np.uint64(33)
+    return x
+
+
+def ecmp_hash_vec(src: np.ndarray, dst: np.ndarray, flow_id: int, seed: int,
+                  nway: int) -> np.ndarray:
+    """Vectorized :func:`ecmp_hash`; bit-identical to the scalar version."""
+    x = ((src.astype(np.uint64) << np.uint64(40))
+         ^ (dst.astype(np.uint64) << np.uint64(18))
+         ^ np.uint64((flow_id << 1) & ((1 << 64) - 1))
+         ^ np.uint64(_mix64(seed)))
+    return (_mix64_vec(x) % np.uint64(nway)).astype(np.int64)
+
+
+# int encoding of a directional link for numpy counting:
+#   (((a << 12) | b) << 11 | channel) << 1 | is_down
+# good for ≤4096 leafs/spines and ≤2048 channels.
+def _decode_link(v: int) -> Link:
+    down = v & 1
+    v >>= 1
+    ch = v & 0x7FF
+    v >>= 11
+    b = v & 0xFFF
+    a = v >> 12
+    return ("down" if down else "up", a, b, ch)
+
+
+def _decode_link_counts(codes: np.ndarray, counts: np.ndarray) -> Counter:
+    out: Counter = Counter()
+    for v, c in zip(codes.tolist(), counts.tolist()):
+        out[_decode_link(v)] = int(c)
+    return out
+
+
+def _encode_links(up_leaf: np.ndarray, up_spine: np.ndarray,
+                  up_ch: np.ndarray, down_spine: np.ndarray,
+                  down_leaf: np.ndarray, down_ch: np.ndarray) -> np.ndarray:
+    upcode = ((((up_leaf << 12) | up_spine) << 11 | up_ch) << 1)
+    dncode = ((((down_spine << 12) | down_leaf) << 11 | down_ch) << 1) | 1
+    return np.concatenate([upcode, dncode])
+
+
 # ---------------------------------------------------------------------------
 # Routing policies
 # ---------------------------------------------------------------------------
@@ -61,6 +113,29 @@ class Routing:
 
     def route_phase(self, phase: Phase) -> List[List[Link]]:
         return [self.route(f, i) for i, f in enumerate(phase)]
+
+    # -- vectorized fast path ------------------------------------------------
+    def _vec_link_codes(self, src: np.ndarray, dst: np.ndarray,
+                        flow_id: int):
+        """Encoded (uplink, downlink) codes of the non-local flows in
+        ``(src, dst)``, as ``(keep_mask, upcodes, dncodes)`` — or ``None``
+        when this routing must route flow-by-flow (stateful load tracking,
+        job-specific source maps)."""
+        return None
+
+    def phase_link_counts(self, src: np.ndarray, dst: np.ndarray,
+                          flow_id: int = 0) -> Optional[Counter]:
+        """Per-link flow counts of one phase, vectorized. Semantically
+        ``Counter(l for f in phase for l in route(f, flow_id))``; ``None``
+        when no vectorized path exists."""
+        res = self._vec_link_codes(src, dst, flow_id)
+        if res is None:
+            return None
+        _, upc, dnc = res
+        if not len(upc):
+            return Counter()
+        vals, cnts = np.unique(np.concatenate([upc, dnc]), return_counts=True)
+        return _decode_link_counts(vals, cnts)
 
     # -- shared helpers -----------------------------------------------------
     def _is_local(self, flow: Flow) -> bool:
@@ -81,6 +156,11 @@ class IdealRouting(Routing):
     def route(self, flow: Flow, flow_id: int = 0) -> List[Link]:
         return []
 
+    def _vec_link_codes(self, src: np.ndarray, dst: np.ndarray,
+                        flow_id: int):
+        empty = np.empty(0, dtype=np.int64)
+        return np.zeros(len(src), dtype=bool), empty, empty
+
 
 class SourceRouting(Routing):
     """Paper §5.2: per-leaf bijection from server-facing ports to uplinks.
@@ -94,6 +174,7 @@ class SourceRouting(Routing):
     def __init__(self, spec: ClusterSpec,
                  maps: Optional[Dict[int, Dict[int, Tuple[int, int]]]] = None):
         super().__init__(spec)
+        self._default_maps = maps is None
         if maps is None:
             maps = {}
             for n in range(spec.num_leafs):
@@ -112,6 +193,23 @@ class SourceRouting(Routing):
         port = s.port_of_gpu(flow.src)
         spine, ch = self.maps[n][port]
         return [self._uplink(n, spine, ch), self._downlink(spine, k, ch)]
+
+    def _vec_link_codes(self, src: np.ndarray, dst: np.ndarray,
+                        flow_id: int):
+        if not self._default_maps:
+            return None  # job-specific maps: route flow-by-flow
+        s = self.spec
+        leaf_s = src // s.gpus_per_leaf
+        leaf_d = dst // s.gpus_per_leaf
+        # same server ⇒ same leaf (servers are contiguous within a leaf), so
+        # the leaf check alone reproduces _is_local
+        m = leaf_s != leaf_d
+        leaf_s, leaf_d = leaf_s[m], leaf_d[m]
+        up = (src[m] % s.gpus_per_leaf) * s.channels
+        spine = up % s.num_spines
+        ch = up // s.num_spines
+        return m, *np.split(_encode_links(leaf_s, spine, ch,
+                                          spine, leaf_d, ch), 2)
 
 
 class ECMPRouting(Routing):
@@ -135,6 +233,22 @@ class ECMPRouting(Routing):
         dch = ecmp_hash(flow.dst, flow.src, flow_id, self.seed + 1,
                         nch) if nch > 1 else 0
         return [self._uplink(n, spine, ch), self._downlink(spine, k, dch)]
+
+    def _vec_link_codes(self, src: np.ndarray, dst: np.ndarray,
+                        flow_id: int):
+        s = self.spec
+        leaf_s = src // s.gpus_per_leaf
+        leaf_d = dst // s.gpus_per_leaf
+        m = leaf_s != leaf_d
+        srcm, dstm = src[m], dst[m]
+        up = ecmp_hash_vec(srcm, dstm, flow_id, self.seed, s.uplinks_per_leaf)
+        spine = up % s.num_spines
+        ch = up // s.num_spines
+        nch = s.base_channels
+        dch = (ecmp_hash_vec(dstm, srcm, flow_id, self.seed + 1, nch)
+               if nch > 1 else np.zeros_like(spine))
+        return m, *np.split(_encode_links(leaf_s[m], spine, ch,
+                                          spine, leaf_d[m], dch), 2)
 
 
 class BalancedECMPRouting(Routing):
@@ -174,6 +288,65 @@ class BalancedECMPRouting(Routing):
         for l in links:
             self.load[l] += 1
         return links
+
+
+def multi_phase_link_counts(routing: Routing, src: np.ndarray,
+                            dst: np.ndarray, phase_idx: np.ndarray,
+                            num_phases: int,
+                            flow_id: int = 0) -> Optional[List[Counter]]:
+    """Per-link flow counts for several concurrent phases in one vectorized
+    pass. ``phase_idx[i]`` assigns flow ``i`` to its phase; the result has
+    one Counter per phase. ``None`` when ``routing`` has no vectorized path.
+    """
+    res = routing._vec_link_codes(src, dst, flow_id)
+    if res is None:
+        return None
+    out: List[Counter] = [Counter() for _ in range(num_phases)]
+    m, upc, dnc = res
+    if not len(upc):
+        return out
+    ph = phase_idx[m]
+    combo = np.concatenate([(ph << 36) | upc, (ph << 36) | dnc])
+    u, c = np.unique(combo, return_counts=True)
+    link_codes = (u & ((np.int64(1) << 36) - 1)).tolist()
+    for p, v, cnt in zip((u >> 36).tolist(), link_codes, c.tolist()):
+        out[p][_decode_link(v)] = int(cnt)
+    return out
+
+
+def alltoall_link_counts(routing: Routing, ranks: Sequence[int],
+                         flow_id: int = 0) -> Optional[Counter]:
+    """Worst-case per-link flow counts across the N-1 pairwise AlltoAll
+    steps (step t: rank i → rank (i+t+1) mod N), fully vectorized.
+
+    Equivalent to routing every step with :func:`pairwise_alltoall` flows,
+    counting links per step, and taking the per-link max over steps — the
+    simulator's aggregate-A2A collapse — without materialising ~N² Flow
+    objects. Returns ``None`` when ``routing`` has no vectorized path.
+    """
+    n = len(ranks)
+    if n < 2:
+        return Counter()
+    r = np.asarray(ranks, dtype=np.int64)
+    src = np.tile(r, n - 1)
+    # step t sends rank i -> rank (i+t+1) mod n; one gather for all steps
+    dst = r[(np.arange(1, n)[:, None] + np.arange(n)[None, :]) % n].ravel()
+    res = routing._vec_link_codes(src, dst, flow_id)
+    if res is None:
+        return None
+    m, upc, dnc = res
+    if not len(upc):
+        return Counter()
+    # link codes occupy 36 bits; tag each with its step index, count per
+    # (step, link), then take the max count per link across steps
+    step = np.repeat(np.arange(n - 1, dtype=np.int64), n)[m]
+    combo = np.concatenate([(step << 36) | upc, (step << 36) | dnc])
+    u, c = np.unique(combo, return_counts=True)
+    link_codes = u & ((np.int64(1) << 36) - 1)
+    uniq, inv = np.unique(link_codes, return_inverse=True)
+    agg = np.zeros(len(uniq), dtype=np.int64)
+    np.maximum.at(agg, inv, c)
+    return _decode_link_counts(uniq, agg)
 
 
 # ---------------------------------------------------------------------------

@@ -18,11 +18,34 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
+from .jobs import Job
 from .ocs import ocs_release, ocs_vclos_place
 from .placement import (Placement, PlacementFailure, commit, release,
                         vclos_place, _stage0_server, _stage1_leaf)
 from .routing import SourceRouting
 from .topology import ClusterSpec, FabricState
+
+QUEUE_POLICIES = ("fifo", "ff", "edf")
+
+
+def order_queue(queue: List[Job], policy: str) -> List[Job]:
+    """Admission order of waiting jobs under a queueing policy (§9.7).
+
+    ``fifo`` keeps arrival order (callers enforce head-of-line blocking),
+    ``ff`` admits fewest-GPU first, ``edf`` earliest-deadline first.  A job
+    without a deadline sorts by its arrival time, i.e. as if its deadline
+    were the moment it arrived — earlier than contemporaneous deadline
+    jobs, but a late arrival can still sort behind an old job's deadline.
+    """
+    if policy == "fifo":
+        return list(queue)
+    if policy == "ff":
+        return sorted(queue, key=lambda j: j.num_gpus)
+    if policy == "edf":
+        return sorted(queue, key=lambda j: j.deadline
+                      if j.deadline is not None else j.arrival)
+    raise ValueError(f"unknown queueing policy {policy!r}; "
+                     f"choose from {QUEUE_POLICIES}")
 
 
 @dataclass

@@ -5,6 +5,16 @@ A fluid-rate model: each running job progresses at
 ideal-iteration; rates change only when the running set changes (arrival
 placement or completion), so the simulation advances event-to-event.
 
+Rate resolution is *incremental* by default: the simulator maintains the
+global per-link load and a link → jobs index, so an arrival/completion only
+re-solves rates for jobs that share a fabric link with the jobs that changed
+— on real traces most running jobs are small/intra-server and never touch
+the fabric, so each event touches a small neighbourhood instead of the whole
+running set. ``incremental=False`` restores the full-recompute sweep; both
+paths call the same per-job solver over the same maintained load counter, so
+they produce bit-identical schedules (asserted by
+``tests/test_campaign.py`` and ``benchmarks/bench_campaign.py``).
+
 Per-strategy behaviour:
   * ``best``       — ideal single-switch: no fabric, share = 1 (upper bound)
   * ``sr``         — source routing, locality-packed placement, no isolation
@@ -16,7 +26,8 @@ Per-strategy behaviour:
                       (Table 5's cautionary column)
 
 Queueing policies: ``fifo`` (strict head-of-line), ``ff`` (fewest-GPU
-first), ``edf`` (earliest deadline first) — §9.7.
+first), ``edf`` (earliest deadline first) — §9.7 (see
+``repro.core.scheduler.order_queue``).
 """
 
 from __future__ import annotations
@@ -24,7 +35,7 @@ from __future__ import annotations
 import math
 from collections import Counter
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -34,11 +45,16 @@ from .ocs import _collect_servers, ocs_release, ocs_vclos_place
 from .placement import (Placement, PlacementFailure, commit, release,
                         vclos_place, _stage0_server, _stage1_leaf)
 from .routing import (BalancedECMPRouting, ECMPRouting, IdealRouting,
-                      Routing, SourceRouting)
+                      Routing, SourceRouting, alltoall_link_counts,
+                      multi_phase_link_counts)
+from .scheduler import QUEUE_POLICIES, order_queue
 from .topology import ClusterSpec, FabricState
 from .traffic import Flow
 
 NVLINK_SPEEDUP = 12.0  # intra-server fabric vs one NIC (Tbps NVLink vs 100G)
+
+STRATEGIES = ("best", "sr", "ecmp", "balanced", "vclos", "ocs-vclos",
+              "ocs-relax")
 
 
 # ---------------------------------------------------------------------------
@@ -79,18 +95,33 @@ class _RunningJob:
 class ClusterSimulator:
     def __init__(self, spec: ClusterSpec, strategy: str = "vclos",
                  scheduler: str = "fifo", seed: int = 0,
-                 ilp_time_limit: float = 2.0):
+                 ilp_time_limit: float = 2.0, incremental: bool = True):
+        if strategy not in STRATEGIES:
+            raise ValueError(f"unknown strategy {strategy!r}; "
+                             f"choose from {STRATEGIES}")
+        if scheduler not in QUEUE_POLICIES:
+            raise ValueError(f"unknown queueing policy {scheduler!r}; "
+                             f"choose from {QUEUE_POLICIES}")
         self.spec = spec
         self.strategy = strategy
         self.scheduler = scheduler
         self.seed = seed
         self.ilp_time_limit = ilp_time_limit
+        self.incremental = incremental
         self.state = FabricState(spec)
         self.routing = self._make_routing()
         self.running: Dict[int, _RunningJob] = {}
         self.queue: List[Job] = []
         self.frag_reason: Dict[int, str] = {}   # job_id -> first blocking cause
+        self.slowdowns: Dict[int, float] = {}   # job_id -> JRT / ideal JRT
         self.now = 0.0
+        # incremental-rate machinery: maintained global link load, link→jobs
+        # index, and the set of links/jobs whose contention changed since the
+        # last rate resolution
+        self._link_load: Counter = Counter()
+        self._link_users: Dict[object, Set[int]] = {}
+        self._dirty_links: Set[object] = set()
+        self._dirty_jobs: Set[int] = set()
 
     # -- strategy plumbing ---------------------------------------------------
     def _make_routing(self) -> Routing:
@@ -108,6 +139,11 @@ class ClusterSimulator:
 
     def _place(self, job: Job):
         jid, n = job.job_id, job.num_gpus
+        # O(1) fast-fail: fewer free GPUs than requested can only ever yield
+        # PlacementFailure("gpu") (every stage needs n GPUs, and idle whole
+        # servers are then always < ceil(n/gps)), so skip the fabric scans
+        if self.state.num_free_gpus() < n:
+            return PlacementFailure("gpu")
         if self.strategy == "vclos":
             return vclos_place(self.state, jid, n,
                                ilp_time_limit=self.ilp_time_limit)
@@ -156,28 +192,71 @@ class ClusterSimulator:
                 maps[leaf] = merged
             routing = SourceRouting(spec, maps=maps)
         route_cache: Dict[Tuple[int, int], list] = {}
-        raw: List[Tuple[str, float, Counter]] = []
-        for kind, phase in job.phases(gpus):
-            counts: Counter = Counter()
-            nbytes = max((f.nbytes for f in phase), default=0.0)
+        isolated = self._isolated()
+
+        def phase_counts(phase) -> Counter:
+            if isolated or intra:
+                # isolated: link reservation pins share = 1; intra-server:
+                # every flow rides NVLink — either way no fabric links
+                return Counter()
+            src = np.fromiter((f.src for f in phase), dtype=np.int64,
+                              count=len(phase))
+            dst = np.fromiter((f.dst for f in phase), dtype=np.int64,
+                              count=len(phase))
+            counts = routing.phase_link_counts(src, dst, job.job_id)
+            if counts is not None:
+                return counts
+            counts = Counter()
             for f in phase:
                 key = (f.src, f.dst)
                 if key not in route_cache:
                     route_cache[key] = routing.route(f, flow_id=job.job_id)
                 for l in route_cache[key]:
                     counts[l] += 1
-            raw.append((kind, nbytes, counts))
+            return counts
+
+        # allreduce phases: one batched vectorized routing pass per job
+        # (falls back to flow-by-flow for stateful/custom-map routings)
+        rest: List[Tuple[str, float, Counter]] = []
+        metas, asrc, adst, aidx = job.ar_phase_arrays(gpus)
+        if isolated or intra:
+            rest = [(k, b, Counter()) for k, b in metas]
+        else:
+            counters = multi_phase_link_counts(routing, asrc, adst, aidx,
+                                               len(metas), job.job_id)
+            if counters is not None:
+                rest = [(k, b, c) for (k, b), c in zip(metas, counters)]
+            else:
+                rest = [(kind, max((f.nbytes for f in phase), default=0.0),
+                         phase_counts(phase))
+                        for kind, phase in job.ar_phases(gpus)]
         # collapse long AlltoAll phase chains (N-1 steps) into one aggregate
         # phase: per-link worst-case load, total bytes — keeps the hash
-        # -collision contention signal at O(1) phases per job
-        a2a = [(k, b, c) for k, b, c in raw if k == "a2a"]
-        rest = [(k, b, c) for k, b, c in raw if k != "a2a"]
-        if len(a2a) > 8:
-            agg: Counter = Counter()
-            for _, _, c in a2a:
-                for l, cnt in c.items():
-                    agg[l] = max(agg[l], cnt)
-            a2a = [("a2a", sum(b for _, b, _ in a2a), agg)]
+        # -collision contention signal at O(1) phases per job.  A vectorized
+        # routing computes the aggregate directly, skipping the ~N² flows.
+        n = len(gpus)
+        a2a: List[Tuple[str, float, Counter]] = []
+        if job.profile.alltoall_bytes > 0 and n >= 2:
+            share = job.profile.alltoall_bytes / n
+            agg: Optional[Counter] = None
+            if n - 1 > 8:
+                agg = (Counter() if isolated or intra else
+                       alltoall_link_counts(routing, gpus,
+                                            flow_id=job.job_id))
+            if agg is not None:
+                # left-to-right sum of the n-1 per-step shares, matching the
+                # seed's `sum(...)` to the last ULP (share*(n-1) rounds
+                # differently and would break bit-parity with old outputs)
+                a2a = [("a2a", sum([share] * (n - 1)), agg)]
+            else:
+                a2a = [("a2a", max((f.nbytes for f in ph), default=0.0),
+                        phase_counts(ph)) for _, ph in job.a2a_phases(gpus)]
+                if len(a2a) > 8:
+                    agg = Counter()
+                    for _, _, c in a2a:
+                        for l, cnt in c.items():
+                            agg[l] = max(agg[l], cnt)
+                    a2a = [("a2a", sum(b for _, b, _ in a2a), agg)]
         for kind, nbytes, counts in rest + a2a:
             rj.phases.append((kind, nbytes, [], counts))
             for l, c in counts.items():
@@ -186,57 +265,106 @@ class ClusterSimulator:
                                           spec.link_gbps)
         return rj
 
+    # -- running-set mutation (keeps the link index consistent) -------------
+    def _add_running(self, job: Job, placement: Placement) -> None:
+        rj = self._build_running(job, placement)
+        self.running[job.job_id] = rj
+        for l, c in rj.union_links.items():
+            self._link_load[l] += c
+            self._link_users.setdefault(l, set()).add(job.job_id)
+        if rj.union_links:
+            self._dirty_links.update(rj.union_links)
+            self._dirty_jobs.add(job.job_id)
+        # a job with no fabric links keeps its default rate of 1.0 forever
+        # (NVLink-local or reserved), so it never needs a rate re-solve
+
+    def _remove_running(self, jid: int) -> _RunningJob:
+        rj = self.running.pop(jid)
+        for l, c in rj.union_links.items():
+            self._link_load[l] -= c
+            if self._link_load[l] <= 0:
+                del self._link_load[l]
+            users = self._link_users.get(l)
+            if users is not None:
+                users.discard(jid)
+                if not users:
+                    del self._link_users[l]
+        self._dirty_links.update(rj.union_links)
+        self._dirty_jobs.discard(jid)
+        return rj
+
+    def _job_rate(self, rj: _RunningJob) -> float:
+        """Max-min share → progress rate of one job under the current
+        maintained global link load."""
+        shares = []
+        for kind, nbytes, _links, counts in rj.phases:
+            worst = 1
+            for l, cnt in counts.items():
+                other = self._link_load[l] - rj.union_links.get(l, 0)
+                worst = max(worst, other + cnt)
+            shares.append(1.0 / worst)
+        eff = rj.iter_effective(shares, self.spec.link_gbps)
+        return rj.iter_ideal / eff if eff > 0 else 1.0
+
     def _recompute_rates(self) -> None:
+        """Resolve progress rates after a running-set change.
+
+        Incremental mode touches newly placed jobs plus every job sharing a
+        dirty link; a job whose links all kept their load cannot change rate,
+        so skipping it is exact, not approximate.
+        """
         if self._isolated():
-            for rj in self.running.values():
-                rj.rate = 1.0
+            # reservations guarantee share = 1 (the _RunningJob default)
+            self._dirty_links.clear()
+            self._dirty_jobs.clear()
             return
-        global_load: Counter = Counter()
-        for rj in self.running.values():
-            global_load.update(rj.union_links)
-        for rj in self.running.values():
-            shares = []
-            for kind, nbytes, _links, counts in rj.phases:
-                worst = 1
-                for l, cnt in counts.items():
-                    other = global_load[l] - rj.union_links.get(l, 0)
-                    worst = max(worst, other + cnt)
-                shares.append(1.0 / worst)
-            eff = rj.iter_effective(shares, self.spec.link_gbps)
-            rj.rate = rj.iter_ideal / eff if eff > 0 else 1.0
+        if self.incremental:
+            affected = set(self._dirty_jobs)
+            for l in self._dirty_links:
+                affected.update(self._link_users.get(l, ()))
+            for jid in affected:
+                rj = self.running.get(jid)
+                if rj is not None:
+                    rj.rate = self._job_rate(rj)
+        else:
+            # faithful full-recompute baseline (the seed algorithm): rebuild
+            # the global load from scratch, re-solve every running job.  The
+            # rebuild equals the maintained counter (integer arithmetic), so
+            # both engines produce bit-identical schedules.
+            load: Counter = Counter()
+            for rj in self.running.values():
+                load.update(rj.union_links)
+            self._link_load = load
+            for rj in self.running.values():
+                rj.rate = self._job_rate(rj)
+        self._dirty_links.clear()
+        self._dirty_jobs.clear()
         # ocs-relax keeps locality penalty implicit: scattered placement
         # yields many cross-leaf flows, captured by the shares above.
 
     # -- event loop ---------------------------------------------------------
+    def _try_schedule(self) -> bool:
+        changed = False
+        for job in order_queue(self.queue, self.scheduler):
+            res = self._place(job)
+            if isinstance(res, PlacementFailure):
+                self.frag_reason.setdefault(job.job_id, res.reason)
+                if self.scheduler == "fifo":
+                    break  # strict head-of-line blocking
+                continue
+            commit(self.state, res)
+            job.start_time = self.now
+            self._add_running(job, res)
+            self.queue.remove(job)
+            changed = True
+        return changed
+
     def run(self, jobs: Sequence[Job],
             max_time: float = float("inf")) -> MetricsReport:
         jobs = sorted(jobs, key=lambda j: j.arrival)
         arrivals = list(jobs)
         ai = 0
         self.now = 0.0
-        pending_finish: Dict[int, float] = {}
-
-        def try_schedule() -> bool:
-            changed = False
-            order = list(self.queue)
-            if self.scheduler == "ff":
-                order.sort(key=lambda j: j.num_gpus)
-            elif self.scheduler == "edf":
-                order.sort(key=lambda j: j.deadline if j.deadline is not None
-                           else j.arrival)
-            for job in order:
-                res = self._place(job)
-                if isinstance(res, PlacementFailure):
-                    self.frag_reason.setdefault(job.job_id, res.reason)
-                    if self.scheduler == "fifo":
-                        break  # strict head-of-line blocking
-                    continue
-                commit(self.state, res)
-                job.start_time = self.now
-                self.running[job.job_id] = self._build_running(job, res)
-                self.queue.remove(job)
-                changed = True
-            return changed
 
         def advance(dt: float) -> None:
             for rj in self.running.values():
@@ -256,32 +384,40 @@ class ClusterSimulator:
             advance(t_next - self.now)
             self.now = t_next
             if next_finish <= next_arrival and fin_id is not None:
-                rj = self.running.pop(fin_id)
+                rj = self._remove_running(fin_id)
                 rj.job.finish_time = self.now
+                ideal = rj.job.num_iters * rj.iter_ideal
+                if rj.job.start_time is not None and ideal > 0:
+                    self.slowdowns[fin_id] = \
+                        (self.now - rj.job.start_time) / ideal
                 if rj.placement.xconn_ports:
                     ocs_release(self.state, rj.placement)
                 else:
                     release(self.state, fin_id)
-                try_schedule()
+                self._try_schedule()
                 self._recompute_rates()
             else:
                 job = arrivals[ai]
                 ai += 1
                 self.queue.append(job)
-                if try_schedule():
+                if self._try_schedule():
                     self._recompute_rates()
         rep = job_metrics(jobs)
         rep.frag_gpu = sum(1 for r in self.frag_reason.values() if r == "gpu")
         rep.frag_network = sum(1 for r in self.frag_reason.values()
                                if r == "network")
+        rep.slowdowns = [self.slowdowns[j.job_id] for j in jobs
+                         if j.job_id in self.slowdowns]
         return rep
 
 
 def simulate(spec: ClusterSpec, jobs: Sequence[Job], strategy: str,
              scheduler: str = "fifo", seed: int = 0,
-             ilp_time_limit: float = 2.0) -> MetricsReport:
+             ilp_time_limit: float = 2.0,
+             incremental: bool = True) -> MetricsReport:
     sim = ClusterSimulator(spec, strategy=strategy, scheduler=scheduler,
-                           seed=seed, ilp_time_limit=ilp_time_limit)
+                           seed=seed, ilp_time_limit=ilp_time_limit,
+                           incremental=incremental)
     # copy jobs so runs under different strategies don't contaminate each other
     import copy
     jobs2 = [copy.copy(j) for j in jobs]

@@ -202,6 +202,16 @@ class FabricState:
     def __post_init__(self) -> None:
         if self.spec.num_ocs and self.ocs is None:
             self.ocs = OCSLayer(self.spec)
+        self._rebuild_occupancy()
+
+    def _rebuild_occupancy(self) -> None:
+        """Recompute the per-server free-GPU counts from ``gpu_owner``.
+        Must be called after replacing ``gpu_owner`` wholesale (snapshot);
+        allocate/release maintain the counts incrementally."""
+        t = self.spec.gpus_per_server
+        self._server_free = [t] * self.spec.num_servers
+        for g in self.gpu_owner:
+            self._server_free[self.spec.server_of_gpu(g)] -= 1
 
     # -- capacity ----------------------------------------------------------
     def capacity(self) -> List[List[int]]:
@@ -227,11 +237,20 @@ class FabricState:
     def gpu_free(self, gpu: int) -> bool:
         return gpu not in self.gpu_owner
 
+    def server_free_gpus(self, server: int) -> int:
+        """O(1) count of idle GPUs on ``server``."""
+        return self._server_free[server]
+
     def idle_gpus_of_server(self, server: int) -> List[int]:
+        free = self._server_free[server]
+        if free == 0:
+            return []
+        if free == self.spec.gpus_per_server:
+            return self.spec.gpus_of_server(server)
         return [g for g in self.spec.gpus_of_server(server) if self.gpu_free(g)]
 
     def server_idle(self, server: int) -> bool:
-        return all(self.gpu_free(g) for g in self.spec.gpus_of_server(server))
+        return self._server_free[server] == self.spec.gpus_per_server
 
     def idle_servers_of_leaf(self, leaf: int) -> List[int]:
         return [sv for sv in self.spec.servers_of_leaf(leaf) if self.server_idle(sv)]
@@ -269,6 +288,7 @@ class FabricState:
             if not self.gpu_free(g):
                 raise ValueError(f"GPU {g} already owned by job {self.gpu_owner[g]}")
             self.gpu_owner[g] = job_id
+            self._server_free[self.spec.server_of_gpu(g)] -= 1
 
     def reserve_links(self, job_id: int, links: Dict[Tuple[int, int], int]) -> None:
         cap = self.capacity()
@@ -281,6 +301,9 @@ class FabricState:
                 self.link_owner.get((n, m), {}).get(job_id, 0) + cnt)
 
     def release_job(self, job_id: int) -> None:
+        for g, j in self.gpu_owner.items():
+            if j == job_id:
+                self._server_free[self.spec.server_of_gpu(g)] += 1
         self.gpu_owner = {g: j for g, j in self.gpu_owner.items() if j != job_id}
         for key in list(self.link_owner):
             self.link_owner[key].pop(job_id, None)
@@ -316,6 +339,7 @@ class FabricState:
         st.gpu_owner = dict(self.gpu_owner)
         st.link_owner = {k: dict(v) for k, v in self.link_owner.items()}
         st.xconn_owner = dict(self.xconn_owner)
+        st._rebuild_occupancy()
         if self.ocs is not None:
             st.ocs = OCSLayer(self.spec, circuits=[dict(c) for c in self.ocs.circuits])
         return st

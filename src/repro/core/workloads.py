@@ -1,0 +1,209 @@
+"""Reproducible workload traces for simulation campaigns (§9.2, §9.8).
+
+The paper's large-scale evidence (Tables 5-7, Fig. 12/13) is trace-driven:
+Poisson job arrivals over empirical GPU-size mixes (Helios for CLUSTER512/
+2048, the TPUv4-style large-job mix of Table 7) with heavy-tailed durations.
+This module makes those traces first-class objects:
+
+  * :class:`WorkloadSpec` — a frozen, hashable description of a synthetic
+    trace (arrival process, size mix, model mix, duration distribution,
+    deadline slack). Same spec + same seed ⇒ bit-identical job list.
+  * :func:`generate_trace` / :func:`poisson_trace` — spec → ``List[Job]``.
+  * :func:`save_trace_csv` / :func:`load_trace_csv` — external traces
+    round-trip through a plain CSV schema, so production traces (or traces
+    exported from other simulators, e.g. CASSINI-style workloads) can be
+    replayed against every strategy.
+  * :func:`trace_stats` — arrival-rate / load sanity summary of a trace.
+
+The generator intentionally mirrors :func:`repro.core.jobs.cluster_dataset`'s
+draw order so ``generate_trace(WorkloadSpec(...))`` reproduces the historical
+datasets when given matching parameters.
+"""
+
+from __future__ import annotations
+
+import csv
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .jobs import (BATCHES, HELIOS_SIZE_MIX, PROFILES, TPUV4_SIZE_MIX, Job,
+                   weighted_choice)
+
+SizeMix = Sequence[Tuple[int, float]]
+
+#: Named empirical GPU-size mixes. "helios" is the §9.2 CLUSTER512/2048
+#: dataset; "tpuv4" is Table 7's large-job mix; "testbed" matches the §8.1
+#: 32-GPU testbed job sizes.
+SIZE_MIXES: Dict[str, SizeMix] = {
+    "helios": HELIOS_SIZE_MIX,
+    "tpuv4": TPUV4_SIZE_MIX,
+    "testbed": [(2, 0.3), (4, 0.3), (8, 0.25), (16, 0.15)],
+}
+
+ALLREDUCE_ALGOS = ("ring", "hierarchical_ring", "hd")
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    """Declarative description of a synthetic Poisson job trace.
+
+    ``mean_interarrival`` is the paper's λ (seconds between arrivals);
+    smaller λ ⇒ higher offered load. ``deadline_slack`` — when set to a
+    ``(lo, hi)`` pair — assigns each job a deadline of
+    ``arrival + ideal_runtime * U(lo, hi)`` for EDF experiments (§9.7).
+    """
+
+    num_jobs: int = 1000
+    mean_interarrival: float = 120.0
+    size_mix: Union[str, Tuple[Tuple[int, float], ...]] = "helios"
+    models: Tuple[str, ...] = tuple(PROFILES)
+    iters_log_mean: float = 8.8
+    iters_log_sigma: float = 1.1
+    min_iters: int = 50
+    max_gpus: Optional[int] = None
+    deadline_slack: Optional[Tuple[float, float]] = None
+    seed: int = 0
+
+    def resolve_mix(self) -> SizeMix:
+        if isinstance(self.size_mix, str):
+            try:
+                return SIZE_MIXES[self.size_mix]
+            except KeyError:
+                raise ValueError(
+                    f"unknown size mix {self.size_mix!r}; "
+                    f"choose from {sorted(SIZE_MIXES)}") from None
+        return list(self.size_mix)
+
+    def with_load(self, mean_interarrival: float) -> "WorkloadSpec":
+        return dataclasses.replace(self, mean_interarrival=mean_interarrival)
+
+    def with_seed(self, seed: int) -> "WorkloadSpec":
+        return dataclasses.replace(self, seed=seed)
+
+
+def generate_trace(spec: WorkloadSpec) -> List[Job]:
+    """Materialise ``spec`` into a job list. Deterministic in ``spec.seed``."""
+    rng = np.random.default_rng(spec.seed)
+    mix = spec.resolve_mix()
+    sizes = [s for s, _ in mix]
+    probs = [p for _, p in mix]
+    models = list(spec.models)
+    jobs: List[Job] = []
+    t = 0.0
+    for i in range(spec.num_jobs):
+        n = int(weighted_choice(rng, sizes, probs))
+        if spec.max_gpus:
+            n = min(n, spec.max_gpus)
+        model = models[rng.integers(len(models))]
+        batch = int(BATCHES[model][rng.integers(len(BATCHES[model]))])
+        algo = ALLREDUCE_ALGOS[rng.integers(len(ALLREDUCE_ALGOS))]
+        iters = int(rng.lognormal(mean=spec.iters_log_mean,
+                                  sigma=spec.iters_log_sigma))
+        t += rng.exponential(spec.mean_interarrival)
+        job = Job(i, model, n, batch, t, max(iters, spec.min_iters),
+                  allreduce_algo=algo)
+        if spec.deadline_slack is not None:
+            lo, hi = spec.deadline_slack
+            job.deadline = t + job.ideal_runtime() * float(rng.uniform(lo, hi))
+        jobs.append(job)
+    return jobs
+
+
+def poisson_trace(num_jobs: int = 1000, mean_interarrival: float = 120.0,
+                  size_mix: Union[str, SizeMix] = "helios", seed: int = 0,
+                  **kwargs) -> List[Job]:
+    """Convenience wrapper: ``generate_trace(WorkloadSpec(...))``."""
+    if not isinstance(size_mix, str):
+        size_mix = tuple((int(s), float(p)) for s, p in size_mix)
+    return generate_trace(WorkloadSpec(num_jobs=num_jobs,
+                                 mean_interarrival=mean_interarrival,
+                                 size_mix=size_mix, seed=seed, **kwargs))
+
+
+# ---------------------------------------------------------------------------
+# CSV trace round-trip
+# ---------------------------------------------------------------------------
+
+TRACE_FIELDS = ("job_id", "model", "num_gpus", "batch_size", "arrival",
+                "num_iters", "allreduce_algo", "deadline")
+
+
+def save_trace_csv(jobs: Sequence[Job], path: str) -> None:
+    """Write an arrival trace as CSV (one row per job, schema
+    ``TRACE_FIELDS``; empty ``deadline`` means none)."""
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(TRACE_FIELDS)
+        for j in jobs:
+            w.writerow([j.job_id, j.model, j.num_gpus, j.batch_size,
+                        repr(j.arrival), j.num_iters, j.allreduce_algo,
+                        "" if j.deadline is None else repr(j.deadline)])
+
+
+def load_trace_csv(path: str) -> List[Job]:
+    """Load an external arrival trace. Validates models/algorithms so typos
+    in hand-written traces fail loudly instead of KeyError-ing mid-run."""
+    jobs: List[Job] = []
+    seen_ids: set = set()
+    with open(path, newline="") as f:
+        reader = csv.DictReader(f)
+        missing = set(TRACE_FIELDS) - set(reader.fieldnames or ())
+        if missing:
+            raise ValueError(f"trace {path}: missing columns {sorted(missing)}")
+        for ln, row in enumerate(reader, start=2):
+            if any(row.get(f) is None for f in TRACE_FIELDS):
+                short = [f for f in TRACE_FIELDS if row.get(f) is None]
+                raise ValueError(f"trace {path}:{ln}: row is missing "
+                                 f"values for {short}")
+            jid = int(row["job_id"])
+            if jid in seen_ids:
+                raise ValueError(f"trace {path}:{ln}: duplicate job_id {jid}"
+                                 " (the simulator keys running jobs by id)")
+            seen_ids.add(jid)
+            model = row["model"]
+            if model not in PROFILES:
+                raise ValueError(f"trace {path}:{ln}: unknown model {model!r}")
+            algo = row["allreduce_algo"] or "ring"
+            if algo not in ALLREDUCE_ALGOS:
+                raise ValueError(f"trace {path}:{ln}: unknown allreduce "
+                                 f"algorithm {algo!r}")
+            num_gpus = int(row["num_gpus"])
+            num_iters = int(row["num_iters"])
+            if num_gpus < 1:
+                raise ValueError(f"trace {path}:{ln}: num_gpus must be "
+                                 f"positive (got {num_gpus})")
+            if num_iters < 1:
+                raise ValueError(f"trace {path}:{ln}: num_iters must be "
+                                 f"positive (got {num_iters})")
+            deadline = row["deadline"].strip()
+            jobs.append(Job(jid, model, num_gpus,
+                            int(row["batch_size"]), float(row["arrival"]),
+                            num_iters, allreduce_algo=algo,
+                            deadline=float(deadline) if deadline else None))
+    jobs.sort(key=lambda j: j.arrival)
+    return jobs
+
+
+# ---------------------------------------------------------------------------
+# Trace sanity
+# ---------------------------------------------------------------------------
+
+def trace_stats(jobs: Sequence[Job]) -> Dict[str, float]:
+    """Arrival-rate / demand summary used by tests and campaign logs."""
+    if not jobs:
+        return {"n": 0, "arrival_rate": 0.0, "mean_interarrival": 0.0,
+                "mean_gpus": 0.0, "gpu_seconds": 0.0}
+    arrivals = sorted(j.arrival for j in jobs)
+    span = arrivals[-1] - arrivals[0]
+    gaps = np.diff(arrivals)
+    return {
+        "n": len(jobs),
+        "arrival_rate": (len(jobs) - 1) / span if span > 0 else float("inf"),
+        "mean_interarrival": float(gaps.mean()) if len(gaps) else 0.0,
+        "mean_gpus": float(np.mean([j.num_gpus for j in jobs])),
+        "gpu_seconds": float(sum(j.num_gpus * j.ideal_runtime()
+                                 for j in jobs)),
+    }

@@ -1,8 +1,24 @@
-"""Dry-run sweep driver: every (arch × shape × mesh) cell in its own
-subprocess (crash isolation + bounded memory), cheap archs first so the
-roofline table fills up early.  Skips cells with committed artifacts.
+"""Sweep drivers.
 
-  PYTHONPATH=src python -m repro.launch.sweep [--mesh pod|multipod|both]
+Two sub-commands (the first positional argument picks one; the default is
+``dryrun`` for backwards compatibility):
+
+``dryrun`` — every (arch × shape × mesh) cell in its own subprocess (crash
+isolation + bounded memory), cheap archs first so the roofline table fills
+up early.  Skips cells with committed artifacts.
+
+  PYTHONPATH=src python -m repro.launch.sweep dryrun [--mesh pod|multipod|both]
+
+``campaign`` — trace-driven simulation campaign over a strategy × queueing
+-policy × load × seed grid (paper §9, Tables 5-7), aggregated to JCT mean/
+p99, queueing delay, makespan and contention-ratio CDFs, optionally written
+to a JSON report.
+
+  PYTHONPATH=src python -m repro.launch.sweep campaign \\
+      --cluster 512 --strategies best,sr,ecmp,vclos --schedulers fifo,ff \\
+      --loads 200,120 --seeds 0,1,2 --jobs 500 --out campaign.json
+  PYTHONPATH=src python -m repro.launch.sweep campaign --trace jobs.csv \\
+      --strategies ecmp,vclos
 """
 
 from __future__ import annotations
@@ -22,12 +38,12 @@ ARCH_COST_ORDER = [  # ascending estimated compile cost
 SHAPE_ORDER = ["decode_32k", "long_500k", "train_4k", "prefill_32k"]
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
+def dryrun_main(argv) -> None:
+    ap = argparse.ArgumentParser(prog="sweep dryrun")
     ap.add_argument("--mesh", default="both")
     ap.add_argument("--timeout", type=int, default=2400)
     ap.add_argument("--force", action="store_true")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
     here = os.path.dirname(os.path.abspath(__file__))
     root = os.path.abspath(os.path.join(here, "..", "..", ".."))
@@ -63,6 +79,104 @@ def main() -> None:
                                    "status": "error",
                                    "error": f"timeout>{args.timeout}s"}, f)
                     print(f"[sweep] {arch} {shape} {mesh} TIMEOUT", flush=True)
+
+
+def _csv(kind):
+    def parse(s: str):
+        return tuple(kind(v.strip()) for v in s.split(",") if v.strip())
+    return parse
+
+
+def campaign_main(argv) -> None:
+    from repro.core import (CLUSTER512, CLUSTER512_OCS, CLUSTER2048,
+                            CLUSTER2048_OCS, TESTBED32, CampaignGrid,
+                            WorkloadSpec, load_trace_csv, run_campaign)
+
+    clusters = {"512": (CLUSTER512, CLUSTER512_OCS),
+                "2048": (CLUSTER2048, CLUSTER2048_OCS),
+                "testbed": (TESTBED32, None)}
+    ap = argparse.ArgumentParser(
+        prog="sweep campaign",
+        description="strategy × policy × load × seed simulation campaign")
+    ap.add_argument("--cluster", default="512", choices=sorted(clusters))
+    ap.add_argument("--strategies", type=_csv(str),
+                    default=("best", "vclos", "sr", "ecmp"))
+    ap.add_argument("--schedulers", type=_csv(str), default=("fifo",))
+    ap.add_argument("--loads", type=_csv(float), default=(120.0,),
+                    help="mean inter-arrival gaps λ in seconds")
+    ap.add_argument("--seeds", type=_csv(int), default=(0,))
+    # workload-shape flags use None sentinels so combining them with
+    # --trace (which fixes the workload) can be rejected instead of
+    # silently ignored
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="synthetic trace length (default 500)")
+    ap.add_argument("--size-mix", default=None,
+                    help="helios | tpuv4 | testbed (default helios)")
+    ap.add_argument("--max-gpus", type=int, default=None,
+                    help="cap job sizes (default: cluster size)")
+    ap.add_argument("--deadline-slack", type=_csv(float), default=None,
+                    metavar="LO,HI", help="assign deadlines for EDF runs")
+    ap.add_argument("--trace", default=None,
+                    help="CSV arrival trace to replay instead of a "
+                         "synthetic workload (see repro.core.workloads)")
+    ap.add_argument("--full-recompute", action="store_true",
+                    help="use the full-recompute rate engine (debug)")
+    ap.add_argument("--ilp-time-limit", type=float, default=2.0)
+    ap.add_argument("--out", default=None, help="write the JSON report here")
+    args = ap.parse_args(argv)
+    if args.deadline_slack is not None and len(args.deadline_slack) != 2:
+        ap.error("--deadline-slack takes exactly two values: LO,HI "
+                 f"(got {','.join(map(str, args.deadline_slack))})")
+    if args.trace:
+        clash = [name for name, val in
+                 (("--jobs", args.jobs), ("--size-mix", args.size_mix),
+                  ("--max-gpus", args.max_gpus),
+                  ("--deadline-slack", args.deadline_slack))
+                 if val is not None]
+        if clash:
+            ap.error(f"--trace fixes the workload; {', '.join(clash)} "
+                     "only shape synthetic traces and would be ignored")
+
+    spec, ocs_spec = clusters[args.cluster]
+    grid = CampaignGrid(strategies=tuple(args.strategies),
+                        schedulers=tuple(args.schedulers),
+                        loads=tuple(args.loads), seeds=tuple(args.seeds))
+    trace = load_trace_csv(args.trace) if args.trace else None
+    workload = WorkloadSpec(
+        num_jobs=500 if args.jobs is None else args.jobs,
+        size_mix="helios" if args.size_mix is None else args.size_mix,
+        max_gpus=spec.num_gpus if args.max_gpus is None else args.max_gpus,
+        deadline_slack=tuple(args.deadline_slack) if args.deadline_slack
+        else None)
+    result = run_campaign(spec, grid, workload=workload, trace=trace,
+                          incremental=not args.full_recompute,
+                          ilp_time_limit=args.ilp_time_limit,
+                          ocs_spec=ocs_spec,
+                          progress=lambda m: print(m, flush=True))
+    cols = ("strategy", "scheduler", "load", "n_finished", "jct_mean",
+            "jct_p99", "queue_delay_mean", "makespan_mean",
+            "contention_ratio_mean")
+    print(",".join(cols))
+    for row in result.aggregate():
+        # contention ratios live in 1.0-1.3: one decimal erases the signal
+        print(",".join(f"{row[c]:.3f}" if c == "contention_ratio_mean"
+                       else f"{row[c]:.1f}" if isinstance(row[c], float)
+                       else str(row[c]) for c in cols))
+    if args.out:
+        result.save(args.out)
+        print(f"[campaign] report -> {args.out}", flush=True)
+
+
+def main() -> None:
+    argv = sys.argv[1:]
+    if argv and argv[0] in ("dryrun", "campaign"):
+        cmd, argv = argv[0], argv[1:]
+    else:
+        cmd = "dryrun"   # legacy default invocation
+    if cmd == "campaign":
+        campaign_main(argv)
+    else:
+        dryrun_main(argv)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,203 @@
+"""Campaign engine: incremental-rate regression, grid sweep, aggregation."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (CLUSTER512, CampaignGrid, WorkloadSpec,
+                        generate_trace, run_campaign, simulate)
+from repro.core.metrics import cdf
+from repro.core.scheduler import order_queue
+from repro.core.jobs import Job
+
+
+# ---------------------------------------------------------------------------
+# incremental-rate engine ≡ full-recompute baseline (the regression fixture)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", ["ecmp", "sr", "balanced", "ocs-relax"])
+def test_incremental_rates_match_full_recompute(strategy):
+    """Arrival/completion events re-solve only jobs sharing a contended
+    link; the schedule must be bit-identical to recomputing everything."""
+    jobs = generate_trace(WorkloadSpec(num_jobs=80, mean_interarrival=100.0,
+                                       seed=11, max_gpus=128))
+    inc = simulate(CLUSTER512, jobs, strategy, incremental=True)
+    full = simulate(CLUSTER512, jobs, strategy, incremental=False)
+    assert inc.n_finished == full.n_finished
+    assert inc.jcts == full.jcts            # exact float equality, per job
+    assert inc.jwts == full.jwts
+    assert inc.slowdowns == full.slowdowns
+
+
+def test_unknown_strategy_rejected():
+    with pytest.raises(ValueError, match="unknown strategy"):
+        simulate(CLUSTER512, [], "warp-drive")
+    with pytest.raises(ValueError, match="queueing policy"):
+        simulate(CLUSTER512, [], "ecmp", scheduler="sjf")
+
+
+# ---------------------------------------------------------------------------
+# vectorized fast paths ≡ their scalar twins (the simulator's phase builder
+# only uses the vectorized side, so drift here would silently shift every
+# published table while the engine-identity test above still passed)
+# ---------------------------------------------------------------------------
+
+def test_vectorized_link_counts_match_scalar_routing():
+    from collections import Counter
+
+    from repro.core.routing import (ECMPRouting, SourceRouting,
+                                    alltoall_link_counts)
+    from repro.core.traffic import Flow, pairwise_alltoall
+
+    spec = CLUSTER512
+    rng = np.random.default_rng(3)
+    src = rng.integers(0, spec.num_gpus, 300)
+    dst = rng.integers(0, spec.num_gpus, 300)
+    for routing in (ECMPRouting(spec, seed=5), SourceRouting(spec)):
+        scalar = Counter()
+        for s, d in zip(src.tolist(), dst.tolist()):
+            for link in routing.route(Flow(s, d, 1.0), flow_id=7):
+                scalar[link] += 1
+        vec = routing.phase_link_counts(src.astype(np.int64),
+                                        dst.astype(np.int64), 7)
+        assert vec == scalar
+
+    # AlltoAll aggregate == per-step counts max-reduced over steps
+    ranks = sorted(rng.choice(spec.num_gpus, 48, replace=False).tolist())
+    routing = ECMPRouting(spec, seed=1)
+    agg = Counter()
+    for phase in pairwise_alltoall(ranks, 1.0):
+        counts = Counter()
+        for f in phase:
+            for link in routing.route(f, flow_id=9):
+                counts[link] += 1
+        for link, c in counts.items():
+            agg[link] = max(agg[link], c)
+    assert alltoall_link_counts(routing, ranks, flow_id=9) == agg
+
+
+def test_ar_phase_arrays_match_ar_phases():
+    rng = np.random.default_rng(0)
+    cases = [("bert", "hd", 24),                   # non-power-of-2 fold
+             ("bert", "hd", 32),
+             ("vgg16", "hierarchical_ring", 48),
+             ("vgg16", "hierarchical_ring", 9),    # non-divisible: flat ring
+             ("resnet50", "ring", 10)]
+    for model, algo, n in cases:
+        ranks = sorted(rng.choice(4096, n, replace=False).tolist())
+        job = Job(0, model, n, 32, 0.0, 10, allreduce_algo=algo)
+        phases = job.ar_phases(ranks)
+        metas, src, dst, pidx = job.ar_phase_arrays(ranks)
+        assert len(metas) == len(phases), (model, algo, n)
+        for i, ((kind, phase), (kind2, nbytes)) in enumerate(zip(phases,
+                                                                 metas)):
+            assert kind == kind2
+            assert nbytes == max((f.nbytes for f in phase), default=0.0)
+            mask = pidx == i
+            assert sorted((f.src, f.dst) for f in phase) == \
+                sorted(zip(src[mask].tolist(), dst[mask].tolist()))
+
+
+def test_slowdowns_reported():
+    jobs = generate_trace(WorkloadSpec(num_jobs=50, mean_interarrival=150.0,
+                                       seed=0, max_gpus=64))
+    best = simulate(CLUSTER512, jobs, "best")
+    ecmp = simulate(CLUSTER512, jobs, "ecmp")
+    assert len(best.slowdowns) == best.n_finished
+    assert all(abs(s - 1.0) < 1e-6 for s in best.slowdowns)
+    assert all(s >= 1.0 - 1e-9 for s in ecmp.slowdowns)
+    assert max(ecmp.slowdowns) > 1.0        # some contention under hashing
+
+
+def test_metrics_extensions():
+    jobs = generate_trace(WorkloadSpec(num_jobs=40, mean_interarrival=150.0,
+                                       seed=1, max_gpus=64))
+    rep = simulate(CLUSTER512, jobs, "sr")
+    assert rep.makespan > 0
+    assert rep.p99_jct >= rep.avg_jct
+    assert len(rep.jcts) == rep.n_finished == len(rep.jwts)
+
+
+# ---------------------------------------------------------------------------
+# queueing-policy ordering (shared scheduler logic)
+# ---------------------------------------------------------------------------
+
+def test_order_queue_policies():
+    jobs = [Job(0, "vgg16", 16, 32, 0.0, 10, deadline=50.0),
+            Job(1, "vgg16", 2, 32, 1.0, 10, deadline=10.0),
+            Job(2, "vgg16", 8, 32, 2.0, 10)]
+    assert [j.job_id for j in order_queue(jobs, "fifo")] == [0, 1, 2]
+    assert [j.job_id for j in order_queue(jobs, "ff")] == [1, 2, 0]
+    # edf: job 2 has no deadline -> sorts by arrival (2.0), before 10/50
+    assert [j.job_id for j in order_queue(jobs, "edf")] == [2, 1, 0]
+    with pytest.raises(ValueError):
+        order_queue(jobs, "lifo")
+
+
+# ---------------------------------------------------------------------------
+# campaign sweeps
+# ---------------------------------------------------------------------------
+
+def test_campaign_grid_validation():
+    with pytest.raises(ValueError, match="unknown strategy"):
+        CampaignGrid(strategies=("warp",))
+    with pytest.raises(ValueError, match="queueing policy"):
+        CampaignGrid(schedulers=("lifo",))
+    grid = CampaignGrid(strategies=("best", "sr"), schedulers=("fifo", "ff"),
+                        loads=(100.0, 200.0), seeds=(0, 1, 2))
+    assert grid.size == 2 * 2 * 2 * 3 == len(list(grid.cells()))
+
+
+def test_campaign_runs_and_aggregates():
+    grid = CampaignGrid(strategies=("best", "ecmp"), loads=(200.0,),
+                        seeds=(0, 1))
+    res = run_campaign(CLUSTER512, grid,
+                       workload=WorkloadSpec(num_jobs=40, max_gpus=64))
+    assert len(res.cells) == grid.size
+    rows = res.aggregate()
+    assert len(rows) == 2                   # one row per (strategy, sched, load)
+    by_strat = {r["strategy"]: r for r in rows}
+    assert by_strat["best"]["seeds"] == 2
+    assert by_strat["best"]["n_finished"] == 80
+    # contention-free upper bound cannot lose to the hashing baseline
+    assert by_strat["best"]["jct_mean"] <= by_strat["ecmp"]["jct_mean"]
+    assert by_strat["best"]["contention_ratio_mean"] <= \
+        by_strat["ecmp"]["contention_ratio_mean"] + 1e-9
+    for row in rows:
+        for key in ("jct_p99", "queue_delay_mean", "queue_delay_p99",
+                    "makespan_mean", "sim_seconds"):
+            assert key in row
+
+
+def test_campaign_cdfs_and_json():
+    grid = CampaignGrid(strategies=("ecmp",), loads=(200.0,), seeds=(0,))
+    res = run_campaign(CLUSTER512, grid,
+                       workload=WorkloadSpec(num_jobs=30, max_gpus=64))
+    curve = res.contention_cdf("ecmp")
+    assert curve, "expected contention samples"
+    xs = [x for x, _ in curve]
+    ys = [y for _, y in curve]
+    assert xs == sorted(xs) and ys == sorted(ys)
+    assert ys[-1] == pytest.approx(1.0)
+    assert min(xs) >= 1.0 - 1e-9            # slowdown is ≥ 1 by definition
+    blob = json.dumps(res.to_json())        # fully serialisable
+    assert "jct_cdfs" in blob
+
+
+def test_campaign_explicit_trace():
+    trace = generate_trace(WorkloadSpec(num_jobs=30, max_gpus=64, seed=3))
+    grid = CampaignGrid(strategies=("sr",), loads=(120.0,), seeds=(0,))
+    res = run_campaign(CLUSTER512, grid, trace=trace)
+    assert res.cells[0].report.n_finished == 30
+    with pytest.raises(ValueError, match="loads axis"):
+        run_campaign(CLUSTER512,
+                     CampaignGrid(strategies=("sr",), loads=(1.0, 2.0)),
+                     trace=trace)
+
+
+def test_cdf_helper():
+    assert cdf([]) == []
+    curve = cdf(list(range(1000)), num_points=20)
+    assert len(curve) <= 21
+    assert curve[-1][1] == pytest.approx(1.0)

@@ -4,6 +4,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional `hypothesis` extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.ops import attention, flash_attention, rwkv6_mix

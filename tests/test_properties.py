@@ -5,6 +5,10 @@ source-routing strategy (injective per-leaf port→uplink maps).
 """
 
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional `hypothesis` extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.patterns import is_leafwise_permutation

@@ -1,0 +1,125 @@
+"""Workload trace generator: determinism, arrival-rate sanity, CSV round-trip."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (SIZE_MIXES, WorkloadSpec, cluster_dataset,
+                        generate_trace, load_trace_csv, poisson_trace,
+                        save_trace_csv, trace_stats)
+from repro.core.jobs import PROFILES
+from repro.core.workloads import ALLREDUCE_ALGOS
+
+
+def _fields(j):
+    return (j.job_id, j.model, j.num_gpus, j.batch_size, j.arrival,
+            j.num_iters, j.allreduce_algo, j.deadline)
+
+
+def test_fixed_seed_is_deterministic():
+    spec = WorkloadSpec(num_jobs=200, seed=7, deadline_slack=(1.5, 4.0))
+    a = generate_trace(spec)
+    b = generate_trace(spec)
+    assert [_fields(x) for x in a] == [_fields(x) for x in b]
+
+
+def test_different_seeds_differ():
+    a = generate_trace(WorkloadSpec(num_jobs=100, seed=0))
+    b = generate_trace(WorkloadSpec(num_jobs=100, seed=1))
+    assert [_fields(x) for x in a] != [_fields(x) for x in b]
+
+
+def test_arrival_rate_sanity():
+    lam = 50.0
+    jobs = generate_trace(WorkloadSpec(num_jobs=4000, mean_interarrival=lam))
+    stats = trace_stats(jobs)
+    assert stats["n"] == 4000
+    # Poisson arrivals: sample mean gap within 10% of λ at n=4000
+    assert abs(stats["mean_interarrival"] - lam) / lam < 0.10
+    assert abs(stats["arrival_rate"] - 1.0 / lam) * lam < 0.15
+
+
+def test_size_mix_respected():
+    for name, mix in SIZE_MIXES.items():
+        allowed = {s for s, _ in mix}
+        jobs = generate_trace(WorkloadSpec(num_jobs=300, size_mix=name))
+        assert {j.num_gpus for j in jobs} <= allowed
+    with pytest.raises(ValueError):
+        generate_trace(WorkloadSpec(size_mix="nope"))
+
+
+def test_models_and_algos_valid():
+    jobs = generate_trace(WorkloadSpec(num_jobs=200))
+    assert {j.model for j in jobs} <= set(PROFILES)
+    assert {j.allreduce_algo for j in jobs} <= set(ALLREDUCE_ALGOS)
+
+
+def test_deadline_slack():
+    jobs = generate_trace(WorkloadSpec(num_jobs=100,
+                                       deadline_slack=(1.5, 4.0)))
+    for j in jobs:
+        slack = (j.deadline - j.arrival) / j.ideal_runtime()
+        assert 1.5 <= slack <= 4.0
+    assert all(j.deadline is None
+               for j in generate_trace(WorkloadSpec(num_jobs=10)))
+
+
+def test_matches_historical_cluster_dataset():
+    """generate_trace reproduces jobs.cluster_dataset draw-for-draw."""
+    old = cluster_dataset(num_jobs=150, lam=90.0, seed=3, max_gpus=128,
+                          with_deadlines=True)
+    new = generate_trace(WorkloadSpec(num_jobs=150, mean_interarrival=90.0,
+                                      seed=3, max_gpus=128,
+                                      deadline_slack=(1.5, 4.0)))
+    assert [_fields(x) for x in old] == [_fields(x) for x in new]
+
+
+def test_csv_round_trip(tmp_path):
+    jobs = generate_trace(WorkloadSpec(num_jobs=120, seed=5,
+                                       deadline_slack=(2.0, 3.0)))
+    path = tmp_path / "trace.csv"
+    save_trace_csv(jobs, str(path))
+    back = load_trace_csv(str(path))
+    assert [_fields(x) for x in jobs] == [_fields(x) for x in back]
+
+
+def test_csv_validation(tmp_path):
+    path = tmp_path / "bad.csv"
+    header = ("job_id,model,num_gpus,batch_size,arrival,num_iters,"
+              "allreduce_algo,deadline\n")
+    path.write_text(header + "0,not_a_model,8,32,0.0,100,ring,\n")
+    with pytest.raises(ValueError, match="unknown model"):
+        load_trace_csv(str(path))
+    path.write_text(header + "0,vgg16,8,32,0.0,100,warp,\n")
+    with pytest.raises(ValueError, match="allreduce"):
+        load_trace_csv(str(path))
+    (tmp_path / "cols.csv").write_text("job_id,model\n0,vgg16\n")
+    with pytest.raises(ValueError, match="missing columns"):
+        load_trace_csv(str(tmp_path / "cols.csv"))
+
+
+def test_load_trace_sorts_by_arrival(tmp_path):
+    jobs = generate_trace(WorkloadSpec(num_jobs=30, seed=1))
+    path = tmp_path / "shuffled.csv"
+    save_trace_csv(list(reversed(jobs)), str(path))
+    back = load_trace_csv(str(path))
+    assert [j.arrival for j in back] == sorted(j.arrival for j in back)
+
+
+def test_poisson_trace_wrapper():
+    a = poisson_trace(num_jobs=50, mean_interarrival=60.0, seed=2,
+                      size_mix="tpuv4")
+    b = generate_trace(WorkloadSpec(num_jobs=50, mean_interarrival=60.0,
+                                    seed=2, size_mix="tpuv4"))
+    assert [_fields(x) for x in a] == [_fields(x) for x in b]
+    # inline (size, prob) mixes are accepted too
+    c = poisson_trace(num_jobs=50, size_mix=[(8, 0.5), (16, 0.5)], seed=0)
+    assert {j.num_gpus for j in c} <= {8, 16}
+
+
+def test_spec_helpers():
+    spec = WorkloadSpec(num_jobs=10, mean_interarrival=100.0, seed=4)
+    assert spec.with_load(50.0).mean_interarrival == 50.0
+    assert spec.with_seed(9).seed == 9
+    assert dataclasses.asdict(spec)["num_jobs"] == 10
