@@ -7,8 +7,11 @@ export PYTHONPATH := src
 test:            ## tier-1 verification (what CI gates on)
 	$(PY) -m pytest -x -q
 
-bench-smoke:     ## ~30s campaign smoke: engine speedup + JCT identity
+bench-smoke:     ## ~60s campaign smoke: v2-vs-v1 speedup, JCT identity, parallel path
 	$(PY) -m benchmarks.bench_campaign
+
+bench-json:      ## campaign + scale + fairshare benches -> BENCH_campaign.json
+	$(PY) -m benchmarks.run --only campaign,scale,fairshare --json
 
 bench:           ## every paper table/figure benchmark
 	$(PY) -m benchmarks.run

@@ -2,15 +2,18 @@
 
 (1) End-to-end campaign: a 512-GPU, ≥500-job Poisson trace simulated across
     four strategies (best / sr / ecmp / ocs-relax) through
-    ``repro.core.campaign.run_campaign``.
-(2) Engine speedup: the same trace replayed under the incremental-rate
-    engine vs the full-recompute baseline (the seed algorithm: rebuild the
-    global link load and re-solve every running job at every event) for the
-    contention baselines that exercise rate re-solving (ecmp, sr), asserting
-    bit-identical JCT output.  ``ocs-relax`` is also reported as the
-    documented worst case: its scattered placement yields a dense contention
-    graph where the affected set approaches the running set, so the
-    incremental engine degrades gracefully to ~1x (never slower).
+    ``repro.core.campaign.run_campaign`` on the v2 heap engine.
+(2) Engine speedup, paired-median protocol: each repeat runs the v2 heap
+    engine, the v1 scan engine, and the v1 full-recompute mode (the seed
+    algorithm — the same fixed baseline PR 1 measured its 2.1x against)
+    back-to-back, contributing one ratio per comparison; the median over
+    repeats is reported, so machine-wide slow patches cancel.  JCT output
+    must be bit-identical across all three.  ``ocs-relax`` is the
+    documented worst case: its scattered placement yields a dense
+    contention graph, so incremental re-solving degrades gracefully.
+(3) Parallel-path smoke: a tiny 2-worker v2 campaign must merge
+    bit-identically to the serial run (guards the ProcessPoolExecutor
+    sharding in ``make bench-smoke``).
 
   PYTHONPATH=src python -m benchmarks.bench_campaign [--full]
 """
@@ -48,46 +51,76 @@ def run(fast: bool = True):
                 for r in res.aggregate()}
     rows.append(timed(f"campaign_cluster512[{n_jobs}jobs]", campaign))
 
-    # -- (2) incremental engine vs full-recompute baseline ------------------
-    # Paired timing: each repeat runs (incremental, full) back-to-back and
-    # contributes one ratio, so machine-wide slow patches cancel; the median
-    # over repeats is the reported speedup.
+    # -- (2) v2 heap engine vs v1 scan engine (paired) ----------------------
     trace = generate_trace(workload)
     simulate(CLUSTER512, trace[:40], "ecmp")    # warm caches/allocators
     repeats = 5
-    speedups = []
+    vs_v1, vs_seed = [], []
     for strat in SPEEDUP_STRATS + WORST_CASE_STRATS:
-        ratios, t_inc, rep = [], float("inf"), {}
+        r_v1, r_seed, t_v2_best, rep = [], [], float("inf"), {}
         for _ in range(repeats):
             t0 = time.time()
-            rep[True] = simulate(CLUSTER512, trace, strat, incremental=True)
-            ti = time.time() - t0
+            rep["v2"] = simulate(CLUSTER512, trace, strat, engine="v2")
+            t_v2 = time.time() - t0
             t0 = time.time()
-            rep[False] = simulate(CLUSTER512, trace, strat, incremental=False)
-            ratios.append((time.time() - t0) / ti)
-            t_inc = min(t_inc, ti)
-        ratios.sort()
-        speedup = ratios[len(ratios) // 2]
-        identical = (rep[True].jcts == rep[False].jcts
-                     and rep[True].n_finished == rep[False].n_finished)
+            rep["v1"] = simulate(CLUSTER512, trace, strat, engine="v1")
+            r_v1.append((time.time() - t0) / t_v2)
+            t0 = time.time()
+            rep["seed"] = simulate(CLUSTER512, trace, strat, engine="v1",
+                                   incremental=False)
+            r_seed.append((time.time() - t0) / t_v2)
+            t_v2_best = min(t_v2_best, t_v2)
+        r_v1.sort()
+        r_seed.sort()
+        med_v1 = r_v1[len(r_v1) // 2]
+        med_seed = r_seed[len(r_seed) // 2]
+        identical = (rep["v2"].jcts == rep["v1"].jcts == rep["seed"].jcts
+                     and rep["v2"].n_finished == rep["v1"].n_finished)
         if strat in SPEEDUP_STRATS:
-            speedups.append(speedup)
+            vs_v1.append(med_v1)
+            vs_seed.append(med_seed)
         rows.append({
             "name": f"campaign_engine[{strat}]",
-            "us_per_call": round(t_inc * 1e6, 1),
-            "derived": {"speedup_vs_full_recompute": round(speedup, 2),
+            "us_per_call": round(t_v2_best * 1e6, 1),
+            "derived": {"engine": "v2", "jobs": n_jobs, "gpus": 512,
+                        "speedup_vs_v1": round(med_v1, 2),
+                        "speedup_vs_seed_full_recompute": round(med_seed, 2),
                         "identical_jct": identical},
         })
-    overall = 1.0
-    for s in speedups:
-        overall *= s
-    overall **= 1.0 / len(speedups)
+
+    def geomean(xs):
+        p = 1.0
+        for x in xs:
+            p *= x
+        return p ** (1.0 / len(xs))
+
     rows.append({
         "name": "campaign_engine[overall]",
         "us_per_call": 0.0,
-        "derived": {"speedup_vs_full_recompute": round(overall, 2),
-                    "meets_2x_target": bool(overall >= 2.0)},
+        "derived": {"engine": "v2", "jobs": n_jobs, "gpus": 512,
+                    "speedup_vs_v1": round(geomean(vs_v1), 2),
+                    "speedup_vs_seed_full_recompute":
+                        round(geomean(vs_seed), 2),
+                    # explicit about the baseline: the 5x gate is against
+                    # the seed full-recompute algorithm (the fixed
+                    # reference PR 1 reported its 2.1x on); the v2-vs-v1
+                    # ratio is reported alongside, ungated (~2.2-3x here,
+                    # ~4-5x at bench_scale's 10k-job size)
+                    "meets_5x_vs_seed_baseline":
+                        bool(geomean(vs_seed) >= 5.0)},
     })
+
+    # -- (3) parallel campaign path: 2 workers ≡ serial ---------------------
+    def parallel_cell():
+        grid = CampaignGrid(strategies=("ecmp", "sr"), loads=(150.0,),
+                            seeds=(0,))
+        small = WorkloadSpec(num_jobs=60, max_gpus=64, seed=0)
+        ser = run_campaign(CLUSTER512, grid, workload=small)
+        par = run_campaign(CLUSTER512, grid, workload=small, workers=2)
+        same = all(a.report.jcts == b.report.jcts
+                   for a, b in zip(ser.cells, par.cells))
+        return {"workers": 2, "identical_to_serial": same}
+    rows.append(timed("campaign_parallel[2workers]", parallel_cell))
     return rows
 
 

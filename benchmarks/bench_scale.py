@@ -1,0 +1,83 @@
+"""Production-trace scale benchmark: 10k jobs on the 2048-GPU cluster.
+
+The v2 heap engine's asymptotic wins (O(log R) event selection, memoised
+placement retries, batched rate solves) only show at trace sizes the v1
+scan engine struggles with.  This benchmark:
+
+(1) completes one 10k-job / 2048-GPU campaign cell through
+    ``run_campaign`` on the v2 engine with streaming aggregation
+    (``store="stream"`` — O(512) retained samples, not O(10k)), and
+(2) reports the paired v2-vs-v1 speedup on that trace (one back-to-back
+    pair per repeat; median) with the bit-identity check.
+
+  PYTHONPATH=src python -m benchmarks.bench_scale [--full]
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import (CLUSTER2048, CampaignGrid, WorkloadSpec,
+                        generate_trace, run_campaign, simulate)
+
+from .common import timed
+
+WORKLOAD = WorkloadSpec(num_jobs=10_000, mean_interarrival=30.0,
+                        max_gpus=1024, seed=0)
+STRAT = "ecmp"          # the rate-resolution workout
+
+
+def run(fast: bool = True):
+    rows = []
+
+    # -- (1) the 10k-job campaign cell, streaming ---------------------------
+    def cell():
+        grid = CampaignGrid(strategies=(STRAT,),
+                            loads=(WORKLOAD.mean_interarrival,), seeds=(0,))
+        res = run_campaign(CLUSTER2048, grid, workload=WORKLOAD,
+                           store="stream")
+        row = res.aggregate()[0]
+        rep = res.cells[0].report
+        return {"jobs": WORKLOAD.num_jobs, "gpus": CLUSTER2048.num_gpus,
+                "engine": "v2", "store": "stream",
+                "n_finished": row["n_finished"],
+                "jct_mean": round(row["jct_mean"], 1),
+                "jct_p99": round(row["jct_p99"], 1),
+                "retained_samples": len(rep.jcts),
+                "completed": row["n_finished"] == WORKLOAD.num_jobs}
+    rows.append(timed(f"scale_campaign_cell[{WORKLOAD.num_jobs}jobs"
+                      f"x{CLUSTER2048.num_gpus}gpus]", cell))
+
+    # -- (2) paired v2-vs-v1 on the 10k trace -------------------------------
+    trace = generate_trace(WORKLOAD)
+    repeats = 1 if fast else 3
+    ratios, t_v2_best, rep = [], float("inf"), {}
+    for _ in range(repeats):
+        t0 = time.time()
+        rep["v2"] = simulate(CLUSTER2048, trace, STRAT, engine="v2")
+        t_v2 = time.time() - t0
+        t0 = time.time()
+        rep["v1"] = simulate(CLUSTER2048, trace, STRAT, engine="v1")
+        ratios.append((time.time() - t0) / t_v2)
+        t_v2_best = min(t_v2_best, t_v2)
+    ratios.sort()
+    rows.append({
+        "name": f"scale_engine[{STRAT}]",
+        "us_per_call": round(t_v2_best * 1e6, 1),
+        "derived": {"engine": "v2", "jobs": WORKLOAD.num_jobs,
+                    "gpus": CLUSTER2048.num_gpus,
+                    "speedup_vs_v1": round(ratios[len(ratios) // 2], 2),
+                    "identical_jct": rep["v2"].jcts == rep["v1"].jcts},
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from .common import emit
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="3 paired repeats instead of 1")
+    args = ap.parse_args()
+    emit(run(fast=not args.full))

@@ -1,12 +1,18 @@
 """Benchmark harness — one module per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--full] [--only fig2,table5]
+                                          [--json [PATH]]
 
-Prints ``name,us_per_call,derived`` CSV (derived = reproduced quantity)."""
+Prints ``name,us_per_call,derived`` CSV (derived = reproduced quantity).
+``--json`` additionally writes a machine-readable report (default
+``BENCH_campaign.json``) carrying every row plus the campaign/scale engine
+summary (paired-median speedup, trace size, engine) so the perf trajectory
+is tracked across PRs."""
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 from .common import emit
@@ -22,8 +28,27 @@ MODULES = [
     ("table6", "benchmarks.bench_table6_sched"),
     ("table7", "benchmarks.bench_table7_dist"),
     ("campaign", "benchmarks.bench_campaign"),
+    ("scale", "benchmarks.bench_scale"),
+    ("fairshare", "benchmarks.bench_fairshare"),
     ("roofline", "benchmarks.roofline"),
 ]
+
+#: rows whose ``derived`` payload is copied into the JSON summary
+SUMMARY_PREFIXES = ("campaign_engine", "scale_engine", "scale_campaign_cell",
+                    "campaign_parallel")
+
+
+def write_json(path: str, rows, failures: int, full: bool) -> None:
+    summary = {r["name"]: r["derived"] for r in rows
+               if r["name"].startswith(SUMMARY_PREFIXES)
+               and not isinstance(r["derived"], str)}
+    with open(path, "w") as f:
+        json.dump({"harness": "benchmarks.run",
+                   "mode": "full" if full else "fast",
+                   "failures": failures,
+                   "engine_summary": summary,
+                   "rows": rows}, f, indent=1, sort_keys=True)
+    print(f"[bench] json -> {path}", file=sys.stderr)
 
 
 def main() -> None:
@@ -31,21 +56,30 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale datasets (5000 jobs, both clusters)")
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", nargs="?", const="BENCH_campaign.json",
+                    default=None, metavar="PATH",
+                    help="also write a machine-readable report "
+                         "(default BENCH_campaign.json)")
     args = ap.parse_args()
     only = {s.strip() for s in args.only.split(",") if s.strip()}
     import importlib
     print("name,us_per_call,derived")
     failures = 0
+    all_rows = []
     for key, modname in MODULES:
         if only and key not in only:
             continue
         try:
             mod = importlib.import_module(modname)
-            emit(mod.run(fast=not args.full))
+            rows = mod.run(fast=not args.full)
+            emit(rows)
+            all_rows.extend(rows)
         except Exception as e:  # keep the harness running
             failures += 1
             print(f"{key},0,\"ERROR: {type(e).__name__}: {e}\"",
                   file=sys.stdout)
+    if args.json:
+        write_json(args.json, all_rows, failures, args.full)
     if failures:
         sys.exit(1)
 

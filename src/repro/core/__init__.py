@@ -37,7 +37,7 @@ from .jobs import (BATCHES, PROFILES, Job, ModelProfile, cluster_dataset,
 from .workloads import (SIZE_MIXES, WorkloadSpec, generate_trace, load_trace_csv,
                         poisson_trace, save_trace_csv, trace_stats)
 from .metrics import MetricsReport, cdf, job_metrics
-from .simulator import STRATEGIES, ClusterSimulator, simulate
+from .simulator import ENGINES, STRATEGIES, ClusterSimulator, simulate
 from .campaign import (CampaignGrid, CampaignResult, CellResult, run_campaign)
 from .scheduler import (Grant, IsolatedScheduler, QUEUE_POLICIES, order_queue)
 from .rankmap import leaf_contiguous_order, mesh_device_order

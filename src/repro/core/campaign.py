@@ -99,7 +99,11 @@ class CampaignResult:
     def aggregate(self) -> List[Dict[str, float]]:
         """One row per (strategy, scheduler, load), pooled across seeds:
         JCT mean/p99, queueing delay (JWT) mean/p99, makespan, contention
-        ratio mean, fragmentation counts."""
+        ratio mean, fragmentation counts.
+
+        Over condensed (streaming) cells the means come from the exact
+        per-cell scalars weighted by finished-job counts; the percentiles
+        pool the retained order statistics (approximate, bounded error)."""
         groups: Dict[Tuple[str, str, float], List[CellResult]] = {}
         for c in self.cells:
             groups.setdefault(c.key(), []).append(c)
@@ -112,17 +116,38 @@ class CampaignResult:
             jwts = np.asarray([s for c in cells for s in c.report.jwts]
                               or [0.0])
             slow = [s for c in cells for s in c.report.slowdowns]
+            n_tot = sum(c.report.n_finished for c in cells)
+            if any(c.report.condensed for c in cells) and n_tot:
+                jct_mean = sum(c.report.avg_jct * c.report.n_finished
+                               for c in cells) / n_tot
+                jwt_mean = sum(c.report.avg_jwt * c.report.n_finished
+                               for c in cells) / n_tot
+                # a mixed group can hold full cells too: their slowdown
+                # stats come straight from the raw samples
+                pairs = [(c.report.slowdown_mean, c.report.n_slowdowns)
+                         if c.report.condensed else
+                         (float(np.mean(c.report.slowdowns))
+                          if c.report.slowdowns else 0.0,
+                          len(c.report.slowdowns))
+                         for c in cells]
+                n_slow = sum(n for _, n in pairs)
+                slow_mean = (sum(m * n for m, n in pairs) / n_slow
+                             if n_slow else 1.0)
+            else:
+                jct_mean = float(jcts.mean())
+                jwt_mean = float(jwts.mean())
+                slow_mean = float(np.mean(slow)) if slow else 1.0
             rows.append({
                 "strategy": strat, "scheduler": sched, "load": load,
                 "seeds": len(cells),
-                "n_finished": sum(c.report.n_finished for c in cells),
-                "jct_mean": float(jcts.mean()),
+                "n_finished": n_tot,
+                "jct_mean": jct_mean,
                 "jct_p99": float(np.percentile(jcts, 99)),
-                "queue_delay_mean": float(jwts.mean()),
+                "queue_delay_mean": jwt_mean,
                 "queue_delay_p99": float(np.percentile(jwts, 99)),
                 "makespan_mean": float(np.mean([c.report.makespan
                                                 for c in cells])),
-                "contention_ratio_mean": float(np.mean(slow)) if slow else 1.0,
+                "contention_ratio_mean": slow_mean,
                 "frag_gpu": sum(c.report.frag_gpu for c in cells),
                 "frag_network": sum(c.report.frag_network for c in cells),
                 "sim_seconds": float(sum(c.wall_time for c in cells)),
@@ -174,10 +199,29 @@ class CampaignResult:
             json.dump(self.to_json(), f, indent=1, sort_keys=True)
 
 
+def _run_cell(spec: ClusterSpec, strat: str, sched: str, seed: int,
+              trace: List[Job], incremental: bool, engine: str,
+              ilp_time_limit: float, store: str) -> Tuple[MetricsReport, float]:
+    """One grid cell — top-level so ``ProcessPoolExecutor`` can pickle it.
+    Streaming cells condense inside the worker, so only O(max_samples)
+    floats cross the process boundary (and stay resident in the parent)."""
+    t0 = time.time()
+    rep = simulate(spec, trace, strat, scheduler=sched, seed=seed,
+                   ilp_time_limit=ilp_time_limit, incremental=incremental,
+                   engine=engine)
+    dt = time.time() - t0
+    if store == "stream":
+        rep.condense()
+    return rep, dt
+
+
 def run_campaign(spec: ClusterSpec, grid: CampaignGrid,
                  workload: Optional[WorkloadSpec] = None,
                  trace: Optional[Sequence[Job]] = None,
                  incremental: bool = True,
+                 engine: str = "v2",
+                 workers: Optional[int] = None,
+                 store: str = "full",
                  ilp_time_limit: float = 2.0,
                  ocs_spec: Optional[ClusterSpec] = None,
                  progress: Optional[Callable[[str], None]] = None,
@@ -190,6 +234,19 @@ def run_campaign(spec: ClusterSpec, grid: CampaignGrid,
     ``trace`` is passed instead, the ``loads`` axis must be a single entry
     (the trace fixes the arrival process) and seeds only vary the
     simulator's internal randomness (ECMP hashing, relaxed placement).
+
+    ``engine`` — simulator engine per cell (``"v2"`` heap engine default,
+    ``"v1"`` scan engine); both produce bit-identical schedules.
+
+    ``workers`` — when > 1, shard grid cells across a
+    ``ProcessPoolExecutor``.  Results are merged in grid order regardless
+    of completion order and every cell's trace/seed is fixed up front, so
+    a parallel campaign is bit-identical to the serial one.
+
+    ``store`` — ``"full"`` keeps every per-job sample; ``"stream"``
+    condenses each cell to bounded-size order statistics
+    (:meth:`repro.core.metrics.MetricsReport.condense`) so 10k-job
+    campaigns hold O(512) floats per cell.
 
     ``ocs_spec`` — cluster used for ``ocs-vclos`` / ``ocs-relax`` cells
     (defaults to ``spec``; pass the ``*_OCS`` preset so those strategies
@@ -215,11 +272,15 @@ def run_campaign(spec: ClusterSpec, grid: CampaignGrid,
                     f"trace job {j.job_id} wants {j.num_gpus} GPUs but the "
                     f"cluster has {limit}; it could never be placed and "
                     f"would starve FIFO campaigns")
+    if store not in ("full", "stream"):
+        raise ValueError(f"unknown store mode {store!r}; "
+                         "choose 'full' or 'stream'")
     if workload is None:
         workload = WorkloadSpec(num_jobs=500, max_gpus=spec.num_gpus)
     result = CampaignResult(spec=spec, grid=grid)
     t0 = time.time()
     traces: Dict[Tuple[float, int], List[Job]] = {}
+    cells: List[Tuple[str, str, float, int, ClusterSpec, List[Job]]] = []
     for strat, sched, load, seed in grid.cells():
         tkey = (load, seed)
         if tkey not in traces:
@@ -229,15 +290,31 @@ def run_campaign(spec: ClusterSpec, grid: CampaignGrid,
                 trace_stats(traces[tkey])
         cell_spec = ocs_spec if (ocs_spec is not None and
                                  strat.startswith("ocs")) else spec
-        tc = time.time()
-        rep = simulate(cell_spec, traces[tkey], strat, scheduler=sched,
-                       seed=seed, ilp_time_limit=ilp_time_limit,
-                       incremental=incremental)
-        dt = time.time() - tc
+        cells.append((strat, sched, load, seed, cell_spec, traces[tkey]))
+
+    def record(strat, sched, load, seed, rep, dt):
         result.cells.append(CellResult(strat, sched, load, seed, rep, dt))
         if progress is not None:
             progress(f"[campaign] {strat}/{sched} λ={load:g} seed={seed}: "
                      f"JCT {rep.avg_jct:.1f}s (n={rep.n_finished}) "
                      f"in {dt:.2f}s")
+
+    if workers and workers > 1:
+        from concurrent.futures import ProcessPoolExecutor
+        with ProcessPoolExecutor(max_workers=workers) as pool:
+            futs = [pool.submit(_run_cell, cell_spec, strat, sched, seed,
+                                tr, incremental, engine, ilp_time_limit,
+                                store)
+                    for strat, sched, load, seed, cell_spec, tr in cells]
+            # merge in submission (= grid) order: deterministic regardless
+            # of which worker finishes first
+            for (strat, sched, load, seed, _, _), fut in zip(cells, futs):
+                rep, dt = fut.result()
+                record(strat, sched, load, seed, rep, dt)
+    else:
+        for strat, sched, load, seed, cell_spec, tr in cells:
+            rep, dt = _run_cell(cell_spec, strat, sched, seed, tr,
+                                incremental, engine, ilp_time_limit, store)
+            record(strat, sched, load, seed, rep, dt)
     result.wall_time = time.time() - t0
     return result

@@ -150,4 +150,175 @@ else:  # pragma: no cover
 def maxmin_fair(flow_links, capacity=1.0, backend: str = "numpy") -> np.ndarray:
     if backend == "jax":
         return maxmin_fair_jax(flow_links, capacity)
+    if backend == "auto":
+        return maxmin_fair_auto(flow_links, capacity)
     return maxmin_fair_numpy(flow_links, capacity)
+
+
+# ---------------------------------------------------------------------------
+# Auto-dispatch: numpy for small solves, the jitted JAX kernel above an
+# auto-tuned crossover size.  "Size" is the dense incidence entry count
+# (flows × distinct links) — what the JAX kernel actually materialises.
+# ---------------------------------------------------------------------------
+
+#: Below this dense size the numpy path always wins (and the auto path never
+#: pays JIT warm-up); above it the measured crossover decides.
+AUTOTUNE_FLOOR = 1 << 16
+
+_CROSSOVER_ENV = "REPRO_MAXMIN_CROSSOVER"
+_crossover: Dict[str, float] = {}          # {"value": size} once resolved
+
+
+def problem_size(flow_links: Sequence[Sequence[Hashable]]) -> int:
+    """Dense incidence entries of one max-min problem (flows × links)."""
+    links = set()
+    for ls in flow_links:
+        links.update(ls)
+    return len(flow_links) * len(links)
+
+
+def _bench_once(fn, flow_links) -> float:
+    import time
+    fn(flow_links)                         # warm (JIT compile / allocator)
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        fn(flow_links)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def autotune_crossover(probe_flows: Sequence[int] = (64, 256, 1024, 4096),
+                       nlinks: int = 64, seed: int = 0) -> float:
+    """Measure numpy vs JAX water-filling over growing problem sizes and
+    return the smallest dense size where the JAX kernel wins (``inf`` when
+    it never does — the common case on host-only builds).  The result is
+    cached module-wide; ``REPRO_MAXMIN_CROSSOVER`` overrides it."""
+    if not _HAVE_JAX:
+        return float("inf")
+    rng = np.random.default_rng(seed)
+    crossover = float("inf")
+    for nflows in probe_flows:
+        flow_links = [rng.choice(nlinks, size=3, replace=False).tolist()
+                      for _ in range(nflows)]
+        t_np = _bench_once(maxmin_fair_numpy, flow_links)
+        t_jx = _bench_once(maxmin_fair_jax, flow_links)
+        if t_jx < t_np:
+            crossover = problem_size(flow_links)
+            break
+    return crossover
+
+
+def maxmin_crossover() -> float:
+    """Resolved numpy→JAX crossover size (env override > cached autotune)."""
+    import os
+    if "value" not in _crossover:
+        env = os.environ.get(_CROSSOVER_ENV)
+        if env is not None:
+            _crossover["value"] = float(env)
+        else:
+            _crossover["value"] = autotune_crossover()
+    return _crossover["value"]
+
+
+def maxmin_fair_auto(flow_links: Sequence[Sequence[Hashable]],
+                     capacity: Dict[Hashable, float] | float = 1.0
+                     ) -> np.ndarray:
+    """Size-dispatched max-min: sparse numpy below the crossover, the dense
+    jitted JAX kernel above it.  Both solvers agree to float32 resolution
+    (asserted by ``tests/test_simulator.py``)."""
+    size = problem_size(flow_links)
+    if size < AUTOTUNE_FLOOR or size < maxmin_crossover():
+        return maxmin_fair_numpy(flow_links, capacity)
+    return maxmin_fair_jax(flow_links, capacity)
+
+
+# ---------------------------------------------------------------------------
+# Batched bottleneck solve for the v2 simulator engine: per-phase worst link
+# load over a CSR-style (values, row-pointer) layout.  Integer in/out, so the
+# numpy and JAX paths are bit-identical by construction and the engine's
+# schedules cannot depend on the dispatch decision.
+# ---------------------------------------------------------------------------
+
+def phase_worst_numpy(vals: np.ndarray, ptr: np.ndarray) -> np.ndarray:
+    """``out[i] = max(vals[ptr[i]:ptr[i+1]])`` (0 for empty segments)."""
+    nseg = len(ptr) - 1
+    out = np.zeros(nseg, dtype=np.int64)
+    if not len(vals):
+        return out
+    width = np.diff(ptr)
+    nonempty = width > 0
+    if nonempty.any():
+        # reduceat over non-empty starts only: each reduction spans to the
+        # next non-empty start, absorbing the interleaved empty segments
+        # (which contribute nothing) — sidesteps reduceat's empty-segment
+        # misbehaviour (it would return vals[ptr[i]])
+        out[nonempty] = np.maximum.reduceat(vals, ptr[:-1][nonempty])
+    return out
+
+
+if _HAVE_JAX:
+
+    @partial(jax.jit, static_argnames=("num_segments",))
+    def _segment_max_kernel(vals: jnp.ndarray, seg: jnp.ndarray,
+                            num_segments: int) -> jnp.ndarray:
+        out = jax.ops.segment_max(vals, seg, num_segments=num_segments)
+        return jnp.maximum(out, 0)         # empty segments -> 0, not int-min
+
+    def phase_worst_jax(vals: np.ndarray, ptr: np.ndarray) -> np.ndarray:
+        """JAX twin of :func:`phase_worst_numpy` (identical integer output).
+
+        Pads values and segment count to powers of two so the jitted kernel
+        is reused across the engine's (ragged) event-time batch shapes."""
+        nseg = len(ptr) - 1
+        if not len(vals):
+            return np.zeros(nseg, dtype=np.int64)
+        seg = np.repeat(np.arange(nseg, dtype=np.int32), np.diff(ptr))
+        n = 1 << int(np.ceil(np.log2(max(len(vals), 1))))
+        nseg_pad = 1 << int(np.ceil(np.log2(max(nseg, 1))))
+        vp = np.zeros(n, dtype=np.int32)
+        vp[:len(vals)] = vals
+        sp = np.full(n, nseg_pad - 1, dtype=np.int32)
+        sp[:len(vals)] = seg
+        out = np.asarray(_segment_max_kernel(jnp.asarray(vp),
+                                             jnp.asarray(sp), nseg_pad))
+        res = out[:nseg].astype(np.int64)
+        if nseg == nseg_pad and len(vals) < n:
+            # padding shared the last real segment: recompute it exactly
+            res[-1] = vals[ptr[-2]:].max() if ptr[-1] > ptr[-2] else 0
+        return res
+else:  # pragma: no cover
+    phase_worst_jax = phase_worst_numpy
+
+
+#: numpy→JAX dispatch size for :func:`phase_worst_loads`.  Resolved from
+#: ``REPRO_PHASE_WORST_CROSSOVER`` once; default ``inf`` (numpy) — the
+#: right call on host-only builds, where the segment-max kernel never wins
+#: (``benchmarks/bench_fairshare.py`` measures both and reports the value
+#: to export on accelerated hosts).  Deliberately *not* autotuned inline:
+#: a JIT-compiling benchmark must never fire mid-simulation, and the
+#: water-filling crossover above is tuned on a different kernel.
+_PW_CROSSOVER_ENV = "REPRO_PHASE_WORST_CROSSOVER"
+_pw_crossover: Dict[str, float] = {}
+
+
+def phase_worst_crossover() -> float:
+    import os
+    if "value" not in _pw_crossover:
+        _pw_crossover["value"] = float(
+            os.environ.get(_PW_CROSSOVER_ENV, "inf"))
+    return _pw_crossover["value"]
+
+
+def phase_worst_loads(vals: np.ndarray, ptr: np.ndarray,
+                      backend: str = "auto") -> np.ndarray:
+    """Batched per-phase bottleneck loads with numpy↔JAX size dispatch —
+    the contended-subgraph solve of the v2 engine's rate resolution.
+    Integer in/out, so the dispatch can never change a schedule."""
+    if backend == "numpy":
+        return phase_worst_numpy(vals, ptr)
+    if backend == "jax":
+        return phase_worst_jax(vals, ptr)
+    if len(vals) < phase_worst_crossover():
+        return phase_worst_numpy(vals, ptr)
+    return phase_worst_jax(vals, ptr)

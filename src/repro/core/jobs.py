@@ -199,13 +199,13 @@ class Job:
             if m > 1:
                 metas.append(("ar", 2.0 * p.param_bytes * (m - 1) / m))
                 srcs.append(leaders)
-                dsts.append(np.roll(leaders, -1))
+                dsts.append(np.concatenate([leaders[1:], leaders[:1]]))
             else:
                 metas.append(("ar", 0.0))
         else:  # ring: one collapsed phase carrying the whole AR volume
             metas.append(("ar", ar))
             srcs.append(r)
-            dsts.append(np.roll(r, -1))
+            dsts.append(np.concatenate([r[1:], r[:1]]))
         if not srcs:
             return metas, *empty
         phase_idx = np.repeat(np.arange(len(srcs), dtype=np.int64),

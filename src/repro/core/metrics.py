@@ -35,6 +35,43 @@ class MetricsReport:
     # contention ratio: actual JRT / contention-free JRT (1.0 = isolated);
     # filled by the simulator, empty when the producer doesn't track rates
     slowdowns: List[float] = field(default_factory=list, repr=False)
+    # streaming-aggregation state (see condense()): when True, the per-job
+    # arrays hold ≤ max_samples evenly-spaced order statistics and the exact
+    # first moments live in the scalars below
+    condensed: bool = False
+    slowdown_mean: float = 0.0
+    n_slowdowns: int = 0
+
+    def condense(self, max_samples: int = 512) -> "MetricsReport":
+        """Bound this report's memory: replace the per-job sample arrays by
+        at most ``max_samples`` evenly-spaced order statistics each.
+
+        Exact means survive in the scalar fields (``avg_jct``, ``avg_jwt``,
+        ``slowdown_mean``); pooled percentiles over condensed reports are
+        approximate (error < 1/max_samples of a quantile step).  The
+        campaign engine uses this as its streaming path so 10k-job sweeps
+        hold O(max_samples) floats per cell instead of O(jobs)."""
+        if self.condensed:
+            # idempotent: re-thinning the retained order statistics would
+            # silently overwrite the exact scalars with sample estimates
+            return self
+
+        def thin(xs: List[float]) -> List[float]:
+            if len(xs) <= max_samples:
+                return sorted(xs)
+            arr = np.sort(np.asarray(xs, dtype=float))
+            idx = np.unique(np.linspace(0, len(arr) - 1,
+                                        max_samples).astype(int))
+            return arr[idx].tolist()
+
+        self.slowdown_mean = (float(np.mean(self.slowdowns))
+                              if self.slowdowns else 0.0)
+        self.n_slowdowns = len(self.slowdowns)
+        self.jcts = thin(self.jcts)
+        self.jwts = thin(self.jwts)
+        self.slowdowns = thin(self.slowdowns)
+        self.condensed = True
+        return self
 
     def row(self) -> Dict[str, float]:
         return {

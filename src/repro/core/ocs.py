@@ -233,10 +233,8 @@ class RewirePlanner:
 def _collect_servers(state: FabricState, n_servers: int,
                      max_leafs: Optional[int] = None) -> Optional[List[int]]:
     """Pick idle servers best-fit across leafs (fewest idle servers first)."""
-    spec = state.spec
-    by_leaf = sorted((len(state.idle_servers_of_leaf(n)), n)
-                     for n in range(spec.num_leafs)
-                     if state.idle_servers_of_leaf(n))
+    counts = state.idle_server_counts()
+    by_leaf = sorted((int(c), n) for n, c in enumerate(counts.tolist()) if c)
     servers: List[int] = []
     leafs_used = 0
     for _, leaf in by_leaf:

@@ -69,16 +69,16 @@ class PlacementFailure:
 # ---------------------------------------------------------------------------
 
 def _stage0_server(state: FabricState, job_id: int, n: int) -> Optional[Placement]:
-    """Best-fit into the server with the fewest idle GPUs that still fits."""
-    spec = state.spec
-    best: Optional[Tuple[int, int]] = None  # (idle_count, server)
-    for sv in range(spec.num_servers):
-        idle = state.server_free_gpus(sv)
-        if idle >= n and (best is None or idle < best[0]):
-            best = (idle, sv)
-    if best is None:
+    """Best-fit into the server with the fewest idle GPUs that still fits.
+
+    Vectorized over the maintained per-server idle counts; ``argmin`` keeps
+    the scalar loop's tie-break (lowest server id among the best fits)."""
+    free = state.server_free_array()
+    cand = np.flatnonzero(free >= n)
+    if not len(cand):
         return None
-    gpus = state.idle_gpus_of_server(best[1])[:n]
+    best = int(cand[np.argmin(free[cand])])
+    gpus = state.idle_gpus_of_server(best)[:n]
     return Placement(job_id, gpus, "server")
 
 
@@ -86,14 +86,12 @@ def _stage1_leaf(state: FabricState, job_id: int, n: int) -> Optional[Placement]
     """Best-fit under one leaf; whole idle servers only (locality, §6.1)."""
     spec = state.spec
     req_servers = math.ceil(n / spec.gpus_per_server)
-    best: Optional[Tuple[int, int]] = None  # (idle_servers, leaf)
-    for leaf in range(spec.num_leafs):
-        idle = state.idle_servers_of_leaf(leaf)
-        if len(idle) >= req_servers and (best is None or len(idle) < best[0]):
-            best = (len(idle), leaf)
-    if best is None:
+    counts = state.idle_server_counts()
+    cand = np.flatnonzero(counts >= req_servers)
+    if not len(cand):
         return None
-    servers = state.idle_servers_of_leaf(best[1])[:req_servers]
+    best = int(cand[np.argmin(counts[cand])])
+    servers = state.idle_servers_of_leaf(best)[:req_servers]
     gpus = [g for sv in servers for g in spec.gpus_of_server(sv)][:n]
     return Placement(job_id, gpus, "leaf")
 
@@ -312,5 +310,7 @@ def commit(state: FabricState, p: Placement) -> None:
         state.xconn_owner[(k, lp)] = p.job_id
 
 
-def release(state: FabricState, job_id: int) -> None:
-    state.release_job(job_id)
+def release(state: FabricState, job_id: int,
+            placement: Optional[Placement] = None) -> None:
+    state.release_job(job_id,
+                      gpus=placement.gpus if placement is not None else None)

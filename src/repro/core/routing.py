@@ -49,14 +49,16 @@ def ecmp_hash(src: int, dst: int, flow_id: int, seed: int, nway: int) -> int:
 
 
 def _mix64_vec(x: np.ndarray) -> np.ndarray:
-    """Vectorized :func:`_mix64` over a uint64 array (wrap-around mul)."""
+    """Vectorized :func:`_mix64` over a uint64 array.  Unlike the scalar
+    path, uint64 *array* multiplies wrap silently in numpy — no errstate
+    guard needed (and the per-call context-manager cost is measurable on
+    the simulator's hot path)."""
     x = x.astype(np.uint64)
-    with np.errstate(over="ignore"):
-        x ^= x >> np.uint64(33)
-        x *= np.uint64(0xFF51AFD7ED558CCD)
-        x ^= x >> np.uint64(33)
-        x *= np.uint64(0xC4CEB9FE1A85EC53)
-        x ^= x >> np.uint64(33)
+    x ^= x >> np.uint64(33)
+    x *= np.uint64(0xFF51AFD7ED558CCD)
+    x ^= x >> np.uint64(33)
+    x *= np.uint64(0xC4CEB9FE1A85EC53)
+    x ^= x >> np.uint64(33)
     return x
 
 
@@ -99,6 +101,112 @@ def _encode_links(up_leaf: np.ndarray, up_spine: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Dense link interning (the v2 engine's array-backed link state)
+# ---------------------------------------------------------------------------
+
+class LinkSpace:
+    """Bijection between directional :data:`Link` tuples and dense integer
+    ids ``[0, nlinks)`` so the simulator can keep link load / per-phase flow
+    counts in flat numpy arrays instead of Counters.
+
+    Layout (arithmetic, no lookup tables):
+      * uplink  ``("up", leaf, spine, ch)``  -> ``(leaf·S + spine)·C + ch``
+      * downlink ``("down", spine, leaf, ch)`` -> ``half + (spine·L + leaf)·C + ch``
+    with ``C = uplinks_per_leaf // num_spines`` (the widest channel index any
+    routing emits) and ``half = L·S·C``.
+    """
+
+    def __init__(self, spec: ClusterSpec):
+        self.spec = spec
+        self.channels = max(1, spec.uplinks_per_leaf // spec.num_spines)
+        self.half = spec.num_leafs * spec.num_spines * self.channels
+        self.nlinks = 2 * self.half
+
+    def id_of(self, link: Link) -> int:
+        """Dense id of one link tuple (scalar fallback paths)."""
+        kind, a, b, ch = link
+        if kind == "up":
+            return (a * self.spec.num_spines + b) * self.channels + ch
+        return self.half + (a * self.spec.num_leafs + b) * self.channels + ch
+
+    def ids_of_codes(self, codes: np.ndarray) -> np.ndarray:
+        """Vectorized 36-bit link codes (``_encode_links``) -> dense ids."""
+        down = codes & 1
+        v = codes >> 1
+        ch = v & 0x7FF
+        v >>= 11
+        b = v & 0xFFF
+        a = v >> 12
+        s = self.spec
+        up_id = (a * s.num_spines + b) * self.channels + ch
+        dn_id = self.half + (a * s.num_leafs + b) * self.channels + ch
+        return np.where(down == 1, dn_id, up_id)
+
+
+def multi_phase_dense_counts(routing: Routing, ls: LinkSpace,
+                             src: np.ndarray, dst: np.ndarray,
+                             phase_idx: np.ndarray, num_phases: int,
+                             flow_id: int = 0) -> Optional[np.ndarray]:
+    """Dense twin of :func:`multi_phase_link_counts`: per-phase per-link flow
+    counts as one ``(num_phases, nlinks)`` int64 matrix (``None`` when
+    ``routing`` has no vectorized path). bincount-based — no sort, no
+    Counter materialisation."""
+    res = routing._vec_dense_ids(src, dst, flow_id, ls)
+    if res is None:
+        return None
+    m, up_ids, dn_ids = res
+    out_shape = (num_phases, ls.nlinks)
+    if not len(up_ids):
+        return np.zeros(out_shape, dtype=np.int64)
+    if num_phases == 1:     # ring AR etc: skip the phase-offset arithmetic
+        flat = np.bincount(np.concatenate([up_ids, dn_ids]),
+                           minlength=ls.nlinks)
+    else:
+        ph = phase_idx[m] * ls.nlinks
+        flat = np.bincount(np.concatenate([ph + up_ids, ph + dn_ids]),
+                           minlength=num_phases * ls.nlinks)
+    return flat.reshape(out_shape)
+
+
+def a2a_step_flows(ranks: Sequence[int]):
+    """Flow arrays of every pairwise-AlltoAll step (step t: rank i →
+    rank (i+t+1) mod N), as ``(src, dst, step_idx)`` — the single source
+    of truth for the step pattern; :func:`traffic.pairwise_alltoall` is
+    its Flow-object twin.  Both engines' builders and the count helpers
+    below must use this so the v1≡v2 bit-parity contract cannot be broken
+    by one copy drifting."""
+    n = len(ranks)
+    r = np.asarray(ranks, dtype=np.int64)
+    if n < 2:
+        empty = np.empty(0, dtype=np.int64)
+        return empty, empty, empty
+    src = np.tile(r, n - 1)
+    dst = r[(np.arange(1, n)[:, None] + np.arange(n)[None, :]) % n].ravel()
+    step = np.repeat(np.arange(n - 1, dtype=np.int64), n)
+    return src, dst, step
+
+
+def alltoall_dense_counts(routing: Routing, ls: LinkSpace,
+                          ranks: Sequence[int],
+                          flow_id: int = 0,
+                          aggregate: bool = True) -> Optional[np.ndarray]:
+    """Dense twin of :func:`alltoall_link_counts`: per-link worst-case flow
+    counts over the N-1 pairwise AlltoAll steps as a ``(nlinks,)`` array
+    (``aggregate=True``), or the per-step ``(N-1, nlinks)`` count matrix
+    (``aggregate=False``). ``None`` when no vectorized path exists."""
+    n = len(ranks)
+    if n < 2:
+        return (np.zeros(ls.nlinks, dtype=np.int64) if aggregate
+                else np.zeros((0, ls.nlinks), dtype=np.int64))
+    src, dst, step = a2a_step_flows(ranks)
+    per_step = multi_phase_dense_counts(routing, ls, src, dst, step, n - 1,
+                                        flow_id)
+    if per_step is None:
+        return None
+    return per_step.max(axis=0) if aggregate else per_step
+
+
+# ---------------------------------------------------------------------------
 # Routing policies
 # ---------------------------------------------------------------------------
 
@@ -122,6 +230,18 @@ class Routing:
         when this routing must route flow-by-flow (stateful load tracking,
         job-specific source maps)."""
         return None
+
+    def _vec_dense_ids(self, src: np.ndarray, dst: np.ndarray,
+                       flow_id: int, ls: "LinkSpace"):
+        """Dense :class:`LinkSpace` link ids of the non-local flows, as
+        ``(keep_mask, up_ids, dn_ids)``.  Subclasses with a vectorized route
+        override this to emit ids arithmetically; the base implementation
+        decodes the 36-bit codes.  ``None`` when no vectorized path exists."""
+        res = self._vec_link_codes(src, dst, flow_id)
+        if res is None:
+            return None
+        m, upc, dnc = res
+        return m, ls.ids_of_codes(upc), ls.ids_of_codes(dnc)
 
     def phase_link_counts(self, src: np.ndarray, dst: np.ndarray,
                           flow_id: int = 0) -> Optional[Counter]:
@@ -158,6 +278,11 @@ class IdealRouting(Routing):
 
     def _vec_link_codes(self, src: np.ndarray, dst: np.ndarray,
                         flow_id: int):
+        empty = np.empty(0, dtype=np.int64)
+        return np.zeros(len(src), dtype=bool), empty, empty
+
+    def _vec_dense_ids(self, src: np.ndarray, dst: np.ndarray,
+                       flow_id: int, ls: "LinkSpace"):
         empty = np.empty(0, dtype=np.int64)
         return np.zeros(len(src), dtype=bool), empty, empty
 
@@ -211,6 +336,22 @@ class SourceRouting(Routing):
         return m, *np.split(_encode_links(leaf_s, spine, ch,
                                           spine, leaf_d, ch), 2)
 
+    def _vec_dense_ids(self, src: np.ndarray, dst: np.ndarray,
+                       flow_id: int, ls: "LinkSpace"):
+        if not self._default_maps:
+            return None  # job-specific maps: route flow-by-flow
+        s = self.spec
+        leaf_s = src // s.gpus_per_leaf
+        leaf_d = dst // s.gpus_per_leaf
+        m = leaf_s != leaf_d
+        leaf_s, leaf_d = leaf_s[m], leaf_d[m]
+        up = (src[m] % s.gpus_per_leaf) * s.channels
+        spine = up % s.num_spines
+        ch = up // s.num_spines
+        up_ids = (leaf_s * s.num_spines + spine) * ls.channels + ch
+        dn_ids = ls.half + (spine * s.num_leafs + leaf_d) * ls.channels + ch
+        return m, up_ids, dn_ids
+
 
 class ECMPRouting(Routing):
     """Hash-based uplink selection — the hash-collision baseline (§3.1)."""
@@ -249,6 +390,23 @@ class ECMPRouting(Routing):
                if nch > 1 else np.zeros_like(spine))
         return m, *np.split(_encode_links(leaf_s[m], spine, ch,
                                           spine, leaf_d[m], dch), 2)
+
+    def _vec_dense_ids(self, src: np.ndarray, dst: np.ndarray,
+                       flow_id: int, ls: "LinkSpace"):
+        s = self.spec
+        leaf_s = src // s.gpus_per_leaf
+        leaf_d = dst // s.gpus_per_leaf
+        m = leaf_s != leaf_d
+        srcm, dstm = src[m], dst[m]
+        up = ecmp_hash_vec(srcm, dstm, flow_id, self.seed, s.uplinks_per_leaf)
+        spine = up % s.num_spines
+        ch = up // s.num_spines
+        nch = s.base_channels
+        dch = (ecmp_hash_vec(dstm, srcm, flow_id, self.seed + 1, nch)
+               if nch > 1 else np.zeros_like(spine))
+        up_ids = (leaf_s[m] * s.num_spines + spine) * ls.channels + ch
+        dn_ids = ls.half + (spine * s.num_leafs + leaf_d[m]) * ls.channels + dch
+        return m, up_ids, dn_ids
 
 
 class BalancedECMPRouting(Routing):
@@ -327,10 +485,7 @@ def alltoall_link_counts(routing: Routing, ranks: Sequence[int],
     n = len(ranks)
     if n < 2:
         return Counter()
-    r = np.asarray(ranks, dtype=np.int64)
-    src = np.tile(r, n - 1)
-    # step t sends rank i -> rank (i+t+1) mod n; one gather for all steps
-    dst = r[(np.arange(1, n)[:, None] + np.arange(n)[None, :]) % n].ravel()
+    src, dst, all_steps = a2a_step_flows(ranks)
     res = routing._vec_link_codes(src, dst, flow_id)
     if res is None:
         return None
@@ -339,7 +494,7 @@ def alltoall_link_counts(routing: Routing, ranks: Sequence[int],
         return Counter()
     # link codes occupy 36 bits; tag each with its step index, count per
     # (step, link), then take the max count per link across steps
-    step = np.repeat(np.arange(n - 1, dtype=np.int64), n)[m]
+    step = all_steps[m]
     combo = np.concatenate([(step << 36) | upc, (step << 36) | dnc])
     u, c = np.unique(combo, return_counts=True)
     link_codes = u & ((np.int64(1) << 36) - 1)

@@ -5,14 +5,27 @@ A fluid-rate model: each running job progresses at
 ideal-iteration; rates change only when the running set changes (arrival
 placement or completion), so the simulation advances event-to-event.
 
-Rate resolution is *incremental* by default: the simulator maintains the
-global per-link load and a link → jobs index, so an arrival/completion only
-re-solves rates for jobs that share a fabric link with the jobs that changed
-— on real traces most running jobs are small/intra-server and never touch
-the fabric, so each event touches a small neighbourhood instead of the whole
-running set. ``incremental=False`` restores the full-recompute sweep; both
-paths call the same per-job solver over the same maintained load counter, so
-they produce bit-identical schedules (asserted by
+Two engines share one numerical contract (see docs/simulator.md):
+
+  * ``engine="v1"`` — the scan engine: per-event minimum over the running
+    set, Counter-backed link loads, per-job rate re-solve in Python.  The
+    ``incremental`` flag selects dirty-link-scoped re-solving (default) or
+    the faithful full-recompute sweep; both are bit-identical.
+  * ``engine="v2"`` — the discrete-event engine (default): a lazy-deletion
+    binary heap of completion events keyed ``(finish_time, placement_order)``
+    replaces the min-over-running-jobs scan, link load and per-phase flow
+    counts live in flat numpy arrays over interned link ids
+    (:class:`repro.core.routing.LinkSpace`), rate resolution is batched
+    across the affected jobs through
+    :func:`repro.core.fairshare.phase_worst_loads` (numpy↔JAX dispatched),
+    and failed placements are memoised against a fabric-state version so a
+    blocked queue head costs O(1) per event instead of a placement attempt.
+
+Both engines settle a job's remaining work *only when its rate value
+changes* (work = elapsed × rate over the constant-rate segment), which makes
+completion times independent of how unrelated events partition time — the
+invariant that lets v2 cache each completion in a heap entry.  v1 and v2
+therefore produce bit-identical schedules (asserted per-strategy by
 ``tests/test_campaign.py`` and ``benchmarks/bench_campaign.py``).
 
 Per-strategy behaviour:
@@ -32,6 +45,7 @@ first), ``edf`` (earliest deadline first) — §9.7 (see
 
 from __future__ import annotations
 
+import heapq
 import math
 from collections import Counter
 from dataclasses import dataclass, field
@@ -39,26 +53,28 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from .fairshare import phase_worst_loads
 from .jobs import GBPS, Job
 from .metrics import MetricsReport, job_metrics
 from .ocs import _collect_servers, ocs_release, ocs_vclos_place
 from .placement import (Placement, PlacementFailure, commit, release,
                         vclos_place, _stage0_server, _stage1_leaf)
 from .routing import (BalancedECMPRouting, ECMPRouting, IdealRouting,
-                      Routing, SourceRouting, alltoall_link_counts,
+                      LinkSpace, Routing, SourceRouting, a2a_step_flows,
+                      alltoall_link_counts, multi_phase_dense_counts,
                       multi_phase_link_counts)
 from .scheduler import QUEUE_POLICIES, order_queue
 from .topology import ClusterSpec, FabricState
-from .traffic import Flow
 
 NVLINK_SPEEDUP = 12.0  # intra-server fabric vs one NIC (Tbps NVLink vs 100G)
 
 STRATEGIES = ("best", "sr", "ecmp", "balanced", "vclos", "ocs-vclos",
               "ocs-relax")
+ENGINES = ("v1", "v2")
 
 
 # ---------------------------------------------------------------------------
-# Running-job bookkeeping
+# Running-job bookkeeping (v1: Counter-backed)
 # ---------------------------------------------------------------------------
 
 @dataclass
@@ -68,6 +84,8 @@ class _RunningJob:
     iters_left: float
     iter_ideal: float
     rate: float = 1.0                     # iterations per ideal-iteration-time
+    last_update: float = 0.0              # when iters_left was last settled
+    t_fin: float = math.inf               # cached completion time
     # phase structures: (kind, per_flow_bytes, [link lists], per-link counts)
     phases: List[Tuple[str, float, List[list], Counter]] = field(default_factory=list)
     union_links: Counter = field(default_factory=Counter)
@@ -88,6 +106,76 @@ class _RunningJob:
         return c + max(0.0, t_ar - j.profile.overlap_beta * c) + t_a2a
 
 
+class _RunJobV2:
+    """Array-backed running job (v2 engine).
+
+    Phase link counts are CSR-style over dense link ids: ``cat_idx`` /
+    ``cat_cnt`` concatenate every phase's (link, flow-count) pairs,
+    ``pptr`` delimits phases, ``cat_ucnt`` aligns the job's per-link union
+    count with ``cat_idx`` so one gather computes every phase's contention.
+    ``uidx``/``uval`` are the union's sparse form for global-load updates.
+    """
+
+    __slots__ = ("job", "placement", "iters_left", "iter_ideal", "rate",
+                 "last_update", "t_fin", "intra_server", "kinds", "nbytes",
+                 "nb_arr", "nar", "cat_idx", "cat_cnt", "cat_ucnt", "pptr",
+                 "uidx", "uval", "order", "version", "slot")
+
+    def __init__(self, job: Job, placement: Placement, intra: bool):
+        self.job = job
+        self.placement = placement
+        self.iters_left = float(job.num_iters)
+        self.iter_ideal = 1.0
+        self.rate = 1.0
+        self.last_update = 0.0
+        self.t_fin = math.inf
+        self.intra_server = intra
+        self.kinds: List[str] = []
+        self.nbytes: List[float] = []
+        self.nb_arr: Optional[np.ndarray] = None    # nbytes as float64 array
+        self.nar = 0                                # count of non-a2a phases
+        self.cat_idx: Optional[np.ndarray] = None
+        self.cat_cnt: Optional[np.ndarray] = None
+        self.cat_ucnt: Optional[np.ndarray] = None
+        self.pptr: Optional[np.ndarray] = None
+        self.uidx: Optional[np.ndarray] = None
+        self.uval: Optional[np.ndarray] = None
+        self.order = 0
+        self.version = 0
+        self.slot = -1
+
+    def iter_effective(self, shares: np.ndarray, link_gbps: float) -> float:
+        # bit-identical twin of _RunningJob.iter_effective: same per-phase
+        # expression; cumsum (not sum) keeps the accumulation strictly
+        # left-to-right like the scalar loop — np.sum switches to 8-way
+        # unrolled pairwise summation at ≥ 8 elements, which rounds
+        # differently.  AR phases are contiguous before the a2a tail, so
+        # the two slices reproduce the loop's separate accumulators.
+        j = self.job
+        c = j.compute_time()
+        bw_mult = NVLINK_SPEEDUP if self.intra_server else 1.0
+        bw = link_gbps * GBPS * bw_mult
+        if self.nb_arr is None:
+            return c + max(0.0, -j.profile.overlap_beta * c)
+        t = self.nb_arr / (bw * np.maximum(shares, 1e-9))
+        nar = self.nar
+        t_ar = float(t[:nar].cumsum()[-1]) if nar else 0.0
+        t_a2a = float(t[nar:].cumsum()[-1]) if len(t) > nar else 0.0
+        return c + max(0.0, t_ar - j.profile.overlap_beta * c) + t_a2a
+
+
+def _settle(rj, now: float) -> None:
+    """Charge the constant-rate segment [last_update, now] against the job's
+    remaining work.  Called only when the rate *value* is about to change —
+    the partition-independence invariant both engines rely on."""
+    rj.iters_left -= (now - rj.last_update) * rj.rate / rj.iter_ideal
+    rj.last_update = now
+
+
+def _finish_time(rj, now: float) -> float:
+    return now + rj.iters_left * rj.iter_ideal / max(rj.rate, 1e-12)
+
+
 # ---------------------------------------------------------------------------
 # Simulator
 # ---------------------------------------------------------------------------
@@ -95,33 +183,60 @@ class _RunningJob:
 class ClusterSimulator:
     def __init__(self, spec: ClusterSpec, strategy: str = "vclos",
                  scheduler: str = "fifo", seed: int = 0,
-                 ilp_time_limit: float = 2.0, incremental: bool = True):
+                 ilp_time_limit: float = 2.0, incremental: bool = True,
+                 engine: str = "v2"):
         if strategy not in STRATEGIES:
             raise ValueError(f"unknown strategy {strategy!r}; "
                              f"choose from {STRATEGIES}")
         if scheduler not in QUEUE_POLICIES:
             raise ValueError(f"unknown queueing policy {scheduler!r}; "
                              f"choose from {QUEUE_POLICIES}")
+        if engine not in ENGINES:
+            raise ValueError(f"unknown engine {engine!r}; "
+                             f"choose from {ENGINES}")
         self.spec = spec
         self.strategy = strategy
         self.scheduler = scheduler
         self.seed = seed
         self.ilp_time_limit = ilp_time_limit
         self.incremental = incremental
+        self.engine = engine
         self.state = FabricState(spec)
         self.routing = self._make_routing()
-        self.running: Dict[int, _RunningJob] = {}
+        self.running: Dict[int, object] = {}
         self.queue: List[Job] = []
         self.frag_reason: Dict[int, str] = {}   # job_id -> first blocking cause
         self.slowdowns: Dict[int, float] = {}   # job_id -> JRT / ideal JRT
         self.now = 0.0
-        # incremental-rate machinery: maintained global link load, link→jobs
-        # index, and the set of links/jobs whose contention changed since the
-        # last rate resolution
+        # v1 incremental-rate machinery: maintained global link load,
+        # link → jobs index, dirty links/jobs since the last resolution
         self._link_load: Counter = Counter()
         self._link_users: Dict[object, Set[int]] = {}
         self._dirty_links: Set[object] = set()
         self._dirty_jobs: Set[int] = set()
+        # v2 array state: dense link ids, flat load vector, dirty-link list,
+        # and a link → running-job bitset index — users[l] is a row of
+        # uint64 words whose set bits are the slots of jobs crossing link l,
+        # so the affected set of an event is one fancy-indexed OR-reduce
+        # over the dirty links (little-endian bit unpack, see
+        # _recompute_rates_v2) instead of a scan over the running set
+        self._ls = LinkSpace(spec)
+        self._load = np.zeros(self._ls.nlinks, dtype=np.int64)
+        self._dirty_cols: List[np.ndarray] = []
+        self._users = np.zeros((self._ls.nlinks, 8), dtype=np.uint64)
+        self._slot_map: List[Optional[_RunJobV2]] = [None] * 512
+        self._free_slots = list(range(511, -1, -1))
+        self._heap: List[Tuple[float, int, int, int]] = []
+        self._order_counter = 0
+        # failed-placement memoisation: a placement attempt is a pure
+        # function of FabricState, so a job that failed at state version V
+        # fails again until a commit/release bumps the version.  The one
+        # exception is vclos, whose stage-2 fallback is a wall-clock
+        # -limited MILP — a timeout failure is not reproducible, so caching
+        # it could diverge from the retry-every-event v1 engine
+        self._state_version = 0
+        self._fail_version: Dict[int, int] = {}
+        self._memoize_failures = strategy != "vclos"
 
     # -- strategy plumbing ---------------------------------------------------
     def _make_routing(self) -> Routing:
@@ -174,7 +289,10 @@ class ClusterSimulator:
         gpus = sorted(rng.choice(len(free), size=n, replace=False).tolist())
         return Placement(jid, [free[i] for i in gpus], "relaxed")
 
-    # -- flow/rate machinery ---------------------------------------------------
+    # =======================================================================
+    # v1 engine: Counter-backed flow/rate machinery + scan event loop
+    # =======================================================================
+
     def _build_running(self, job: Job, placement: Placement) -> _RunningJob:
         spec = self.spec
         gpus = placement.gpus[:job.num_gpus]
@@ -268,6 +386,8 @@ class ClusterSimulator:
     # -- running-set mutation (keeps the link index consistent) -------------
     def _add_running(self, job: Job, placement: Placement) -> None:
         rj = self._build_running(job, placement)
+        rj.last_update = self.now
+        rj.t_fin = _finish_time(rj, self.now)
         self.running[job.job_id] = rj
         for l, c in rj.union_links.items():
             self._link_load[l] += c
@@ -306,6 +426,14 @@ class ClusterSimulator:
         eff = rj.iter_effective(shares, self.spec.link_gbps)
         return rj.iter_ideal / eff if eff > 0 else 1.0
 
+    def _apply_rate(self, rj, new: float) -> None:
+        """Install a re-solved rate; settle + re-cache the completion time
+        only when the value actually changed (skipping is exact)."""
+        if new != rj.rate:
+            _settle(rj, self.now)
+            rj.rate = new
+            rj.t_fin = _finish_time(rj, self.now)
+
     def _recompute_rates(self) -> None:
         """Resolve progress rates after a running-set change.
 
@@ -325,24 +453,24 @@ class ClusterSimulator:
             for jid in affected:
                 rj = self.running.get(jid)
                 if rj is not None:
-                    rj.rate = self._job_rate(rj)
+                    self._apply_rate(rj, self._job_rate(rj))
         else:
             # faithful full-recompute baseline (the seed algorithm): rebuild
             # the global load from scratch, re-solve every running job.  The
             # rebuild equals the maintained counter (integer arithmetic), so
-            # both engines produce bit-identical schedules.
+            # both modes produce bit-identical schedules.
             load: Counter = Counter()
             for rj in self.running.values():
                 load.update(rj.union_links)
             self._link_load = load
             for rj in self.running.values():
-                rj.rate = self._job_rate(rj)
+                self._apply_rate(rj, self._job_rate(rj))
         self._dirty_links.clear()
         self._dirty_jobs.clear()
         # ocs-relax keeps locality penalty implicit: scattered placement
         # yields many cross-leaf flows, captured by the shares above.
 
-    # -- event loop ---------------------------------------------------------
+    # -- v1 event loop -------------------------------------------------------
     def _try_schedule(self) -> bool:
         changed = False
         for job in order_queue(self.queue, self.scheduler):
@@ -359,41 +487,22 @@ class ClusterSimulator:
             changed = True
         return changed
 
-    def run(self, jobs: Sequence[Job],
-            max_time: float = float("inf")) -> MetricsReport:
-        jobs = sorted(jobs, key=lambda j: j.arrival)
-        arrivals = list(jobs)
+    def _run_v1(self, arrivals: List[Job], max_time: float) -> None:
         ai = 0
-        self.now = 0.0
-
-        def advance(dt: float) -> None:
-            for rj in self.running.values():
-                rj.iters_left -= dt * rj.rate / rj.iter_ideal
-
         while (ai < len(arrivals) or self.queue or self.running) \
                 and self.now < max_time:
             next_arrival = arrivals[ai].arrival if ai < len(arrivals) else math.inf
             next_finish, fin_id = math.inf, None
             for jid, rj in self.running.items():
-                t = self.now + rj.iters_left * rj.iter_ideal / max(rj.rate, 1e-12)
-                if t < next_finish:
-                    next_finish, fin_id = t, jid
+                if rj.t_fin < next_finish:
+                    next_finish, fin_id = rj.t_fin, jid
             t_next = min(next_arrival, next_finish)
             if t_next is math.inf:
                 break
-            advance(t_next - self.now)
             self.now = t_next
             if next_finish <= next_arrival and fin_id is not None:
                 rj = self._remove_running(fin_id)
-                rj.job.finish_time = self.now
-                ideal = rj.job.num_iters * rj.iter_ideal
-                if rj.job.start_time is not None and ideal > 0:
-                    self.slowdowns[fin_id] = \
-                        (self.now - rj.job.start_time) / ideal
-                if rj.placement.xconn_ports:
-                    ocs_release(self.state, rj.placement)
-                else:
-                    release(self.state, fin_id)
+                self._finish_job(rj, fin_id)
                 self._try_schedule()
                 self._recompute_rates()
             else:
@@ -402,6 +511,298 @@ class ClusterSimulator:
                 self.queue.append(job)
                 if self._try_schedule():
                     self._recompute_rates()
+
+    def _finish_job(self, rj, fin_id: int) -> None:
+        rj.job.finish_time = self.now
+        ideal = rj.job.num_iters * rj.iter_ideal
+        if rj.job.start_time is not None and ideal > 0:
+            self.slowdowns[fin_id] = \
+                (self.now - rj.job.start_time) / ideal
+        if rj.placement.xconn_ports:
+            ocs_release(self.state, rj.placement)
+        else:
+            release(self.state, fin_id, rj.placement)
+
+    # =======================================================================
+    # v2 engine: dense link arrays, batched rate solve, completion heap
+    # =======================================================================
+
+    def _build_running_v2(self, job: Job, placement: Placement) -> _RunJobV2:
+        spec = self.spec
+        ls = self._ls
+        gpus = placement.gpus[:job.num_gpus]
+        # one server holds a contiguous GPU-id block, so min/max deciding
+        # the same server ⇔ every id does (order-independent)
+        gps = spec.gpus_per_server
+        intra = min(gpus) // gps == max(gpus) // gps
+        rj = _RunJobV2(job, placement, intra)
+        isolated = self._isolated()
+        n = len(gpus)
+        mat: Optional[np.ndarray] = None
+        metas, asrc, adst, aidx = job.ar_phase_arrays(gpus)
+        if isolated or intra:
+            for k, b in metas:
+                rj.kinds.append(k)
+                rj.nbytes.append(b)
+            if job.profile.alltoall_bytes > 0 and n >= 2:
+                self._append_a2a_meta(rj, job, n)
+            # reserved/NVLink: no fabric links, share stays 1 (mat is None)
+        else:
+            # one routing pass for the whole job: AR phases and the N-1
+            # AlltoAll steps concatenate into a single (src, dst, phase)
+            # batch — one hash/bincount sweep instead of two
+            has_a2a = job.profile.alltoall_bytes > 0 and n >= 2
+            nar = len(metas)
+            if has_a2a:
+                a2a_src, a2a_dst, a2a_step = a2a_step_flows(gpus)
+                a2a_idx = nar + a2a_step
+                src = np.concatenate([asrc, a2a_src])
+                dst = np.concatenate([adst, a2a_dst])
+                pidx = np.concatenate([aidx, a2a_idx])
+                nphases = nar + n - 1
+            else:
+                src, dst, pidx, nphases = asrc, adst, aidx, nar
+            mat = multi_phase_dense_counts(self.routing, ls, src, dst,
+                                           pidx, nphases, job.job_id)
+            if mat is None:
+                # stateful routing (balanced): build through the Counter
+                # path so route() sees the same flow sequence, then densify
+                return self._densify_v1_build(job, placement, rj)
+            for k, b in metas:
+                rj.kinds.append(k)
+                rj.nbytes.append(b)
+            if has_a2a and self._append_a2a_meta(rj, job, n):
+                mat = np.vstack([mat[:nar],
+                                 mat[nar:].max(axis=0, keepdims=True)])
+        if mat is not None:
+            self._attach_dense_phases(rj, mat)
+        self._seal_v2(rj)
+        return rj
+
+    @staticmethod
+    def _append_a2a_meta(rj: _RunJobV2, job: Job, n: int) -> bool:
+        """kinds/nbytes of the AlltoAll phases — aggregate-collapsed to one
+        phase when n-1 > 8, one phase per step otherwise.  Returns whether
+        the collapse applies.  The byte accounting (``share = bytes/n``,
+        the left-to-right ``sum([share]*(n-1))``) must stay ULP-identical
+        to v1's ``_build_running``; this is the single v2 copy."""
+        share = job.profile.alltoall_bytes / n
+        if n - 1 > 8:
+            rj.kinds.append("a2a")
+            rj.nbytes.append(sum([share] * (n - 1)))
+            return True
+        for _ in range(n - 1):
+            rj.kinds.append("a2a")
+            rj.nbytes.append(share)
+        return False
+
+    def _seal_v2(self, rj: _RunJobV2) -> None:
+        """Freeze the phase byte counts into array form and compute the
+        contention-free iteration time."""
+        if rj.kinds:
+            rj.nb_arr = np.asarray(rj.nbytes, dtype=np.float64)
+            rj.nar = sum(1 for k in rj.kinds if k != "a2a")
+        rj.iter_ideal = rj.iter_effective(np.ones(len(rj.kinds)),
+                                          self.spec.link_gbps)
+
+    def _densify_v1_build(self, job: Job, placement: Placement,
+                          rj: _RunJobV2) -> _RunJobV2:
+        ls = self._ls
+        rj1 = self._build_running(job, placement)
+        rows = []
+        for kind, nbytes, _links, counts in rj1.phases:
+            rj.kinds.append(kind)
+            rj.nbytes.append(nbytes)
+            row = np.zeros(ls.nlinks, dtype=np.int64)
+            for l, c in counts.items():
+                row[ls.id_of(l)] = c
+            rows.append(row)
+        if rows and rj1.union_links:
+            self._attach_dense_phases(rj, np.vstack(rows))
+        self._seal_v2(rj)
+        # the Counter build already computed the same contention-free
+        # iteration time; keep the v1-built float verbatim
+        rj.iter_ideal = rj1.iter_ideal
+        return rj
+
+    def _attach_dense_phases(self, rj: _RunJobV2, mat: np.ndarray) -> None:
+        union = mat.max(axis=0)
+        uidx = np.nonzero(union)[0]
+        if not len(uidx):
+            return
+        rj.uidx = uidx
+        rj.uval = union[uidx]
+        nz_ph, nz_l = np.nonzero(mat)
+        rj.cat_idx = nz_l
+        rj.cat_cnt = mat[nz_ph, nz_l]
+        rj.cat_ucnt = union[nz_l]
+        rj.pptr = np.searchsorted(nz_ph, np.arange(mat.shape[0] + 1))
+
+    def _alloc_slot(self, rj: _RunJobV2) -> int:
+        if not self._free_slots:
+            # double the bitset width; existing slot bits are untouched
+            nslots = len(self._slot_map)
+            self._users = np.hstack(
+                [self._users, np.zeros_like(self._users)])
+            self._slot_map.extend([None] * nslots)
+            self._free_slots = list(range(2 * nslots - 1, nslots - 1, -1))
+        slot = self._free_slots.pop()
+        self._slot_map[slot] = rj
+        return slot
+
+    def _add_running_v2(self, job: Job, placement: Placement) -> None:
+        rj = self._build_running_v2(job, placement)
+        rj.last_update = self.now
+        rj.t_fin = _finish_time(rj, self.now)
+        rj.order = self._order_counter
+        self._order_counter += 1
+        self.running[job.job_id] = rj
+        if rj.uidx is not None:
+            self._load[rj.uidx] += rj.uval
+            self._dirty_cols.append(rj.uidx)
+            rj.slot = self._alloc_slot(rj)
+            self._users[rj.uidx, rj.slot >> 6] |= np.uint64(1 << (rj.slot & 63))
+        heapq.heappush(self._heap, (rj.t_fin, rj.order, job.job_id,
+                                    rj.version))
+
+    def _remove_running_v2(self, jid: int) -> _RunJobV2:
+        rj = self.running.pop(jid)
+        if rj.uidx is not None:
+            self._load[rj.uidx] -= rj.uval
+            self._dirty_cols.append(rj.uidx)
+            self._users[rj.uidx, rj.slot >> 6] &= np.uint64(
+                ~(1 << (rj.slot & 63)) & 0xFFFFFFFFFFFFFFFF)
+            self._slot_map[rj.slot] = None
+            self._free_slots.append(rj.slot)
+        return rj
+
+    def _recompute_rates_v2(self) -> None:
+        if self._isolated():
+            return
+        if not self._dirty_cols:
+            return
+        dirty = (self._dirty_cols[0] if len(self._dirty_cols) == 1
+                 else np.concatenate(self._dirty_cols))
+        self._dirty_cols.clear()
+        if self.incremental:
+            # one OR-reduce over the dirty links' user bitsets gives every
+            # affected job's slot (x86/arm little-endian word layout)
+            words = np.bitwise_or.reduce(self._users[dirty], axis=0)
+            bits = np.unpackbits(words.view(np.uint8), bitorder="little")
+            affected = [self._slot_map[s] for s in np.flatnonzero(bits)]
+        else:
+            affected = [rj for rj in self.running.values()
+                        if rj.uidx is not None]
+        if not affected:
+            return
+        # batched contended-subgraph solve: one gather + segmented max over
+        # every affected job's phases (numpy below the fairshare crossover,
+        # the jitted JAX kernel above it — integer output either way)
+        if len(affected) == 1:
+            rj0 = affected[0]
+            vals = self._load[rj0.cat_idx] - rj0.cat_ucnt + rj0.cat_cnt
+            ptr = rj0.pptr
+        else:
+            idx = np.concatenate([rj.cat_idx for rj in affected])
+            cnt = np.concatenate([rj.cat_cnt for rj in affected])
+            ucnt = np.concatenate([rj.cat_ucnt for rj in affected])
+            vals = self._load[idx] - ucnt + cnt
+            ptrs = [np.asarray([0])]
+            off = 0
+            for rj in affected:
+                ptrs.append(rj.pptr[1:] + off)
+                off += rj.pptr[-1]
+            ptr = np.concatenate(ptrs)
+        worst = phase_worst_loads(vals, ptr)
+        gbps = self.spec.link_gbps
+        p0 = 0
+        for rj in affected:
+            nph = len(rj.pptr) - 1
+            shares = 1.0 / np.maximum(worst[p0:p0 + nph], 1)
+            p0 += nph
+            eff = rj.iter_effective(shares, gbps)
+            new = rj.iter_ideal / eff if eff > 0 else 1.0
+            if new != rj.rate:
+                _settle(rj, self.now)
+                rj.rate = new
+                rj.t_fin = _finish_time(rj, self.now)
+                rj.version += 1
+                heapq.heappush(self._heap, (rj.t_fin, rj.order,
+                                            rj.job.job_id, rj.version))
+
+    def _try_schedule_v2(self) -> bool:
+        changed = False
+        ver = self._state_version
+        memo = self._memoize_failures
+        if memo and self.scheduler == "fifo" and self.queue and \
+                self._fail_version.get(self.queue[0].job_id) == ver:
+            return False    # memoised head-of-line block: O(1) per event
+        for job in order_queue(self.queue, self.scheduler):
+            if memo and self._fail_version.get(job.job_id) == ver:
+                # placement is a pure function of fabric state: this job
+                # failed at the current state version, so it fails again
+                if self.scheduler == "fifo":
+                    break
+                continue
+            res = self._place(job)
+            if isinstance(res, PlacementFailure):
+                self.frag_reason.setdefault(job.job_id, res.reason)
+                self._fail_version[job.job_id] = ver
+                if self.scheduler == "fifo":
+                    break  # strict head-of-line blocking
+                continue
+            commit(self.state, res)
+            ver = self._state_version = self._state_version + 1
+            job.start_time = self.now
+            self._add_running_v2(job, res)
+            self.queue.remove(job)
+            changed = True
+        return changed
+
+    def _run_v2(self, arrivals: List[Job], max_time: float) -> None:
+        ai = 0
+        heap = self._heap
+        running = self.running
+        while (ai < len(arrivals) or self.queue or running) \
+                and self.now < max_time:
+            next_arrival = arrivals[ai].arrival if ai < len(arrivals) else math.inf
+            # lazy deletion: drop heap entries whose job finished or whose
+            # rate changed since the push (version mismatch)
+            while heap:
+                t, order, jid, ver = heap[0]
+                rj = running.get(jid)
+                if rj is None or rj.version != ver:
+                    heapq.heappop(heap)
+                    continue
+                break
+            next_finish = heap[0][0] if heap else math.inf
+            t_next = min(next_arrival, next_finish)
+            if t_next is math.inf:
+                break
+            self.now = t_next
+            if next_finish <= next_arrival and heap:
+                _, _, fin_id, _ = heapq.heappop(heap)
+                rj = self._remove_running_v2(fin_id)
+                self._finish_job(rj, fin_id)
+                self._state_version += 1
+                self._try_schedule_v2()
+                self._recompute_rates_v2()
+            else:
+                job = arrivals[ai]
+                ai += 1
+                self.queue.append(job)
+                if self._try_schedule_v2():
+                    self._recompute_rates_v2()
+
+    # -- entry point ---------------------------------------------------------
+    def run(self, jobs: Sequence[Job],
+            max_time: float = float("inf")) -> MetricsReport:
+        jobs = sorted(jobs, key=lambda j: j.arrival)
+        self.now = 0.0
+        if self.engine == "v1":
+            self._run_v1(list(jobs), max_time)
+        else:
+            self._run_v2(list(jobs), max_time)
         rep = job_metrics(jobs)
         rep.frag_gpu = sum(1 for r in self.frag_reason.values() if r == "gpu")
         rep.frag_network = sum(1 for r in self.frag_reason.values()
@@ -414,10 +815,10 @@ class ClusterSimulator:
 def simulate(spec: ClusterSpec, jobs: Sequence[Job], strategy: str,
              scheduler: str = "fifo", seed: int = 0,
              ilp_time_limit: float = 2.0,
-             incremental: bool = True) -> MetricsReport:
+             incremental: bool = True, engine: str = "v2") -> MetricsReport:
     sim = ClusterSimulator(spec, strategy=strategy, scheduler=scheduler,
                            seed=seed, ilp_time_limit=ilp_time_limit,
-                           incremental=incremental)
+                           incremental=incremental, engine=engine)
     # copy jobs so runs under different strategies don't contaminate each other
     import copy
     jobs2 = [copy.copy(j) for j in jobs]

@@ -21,6 +21,8 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 Link = Tuple[str, int, int, int]  # ("up"|"down", leaf, spine, channel)
 
 
@@ -212,6 +214,25 @@ class FabricState:
         self._server_free = [t] * self.spec.num_servers
         for g in self.gpu_owner:
             self._server_free[self.spec.server_of_gpu(g)] -= 1
+        self._free_snapshot = None
+
+    def server_free_array(self):
+        """Per-server idle-GPU counts as a numpy snapshot (placement fast
+        paths; the counts themselves stay a list for O(1) scalar updates).
+        Cached between mutations — repeated placement attempts against an
+        unchanged fabric reuse one snapshot."""
+        if self._free_snapshot is None:
+            self._free_snapshot = np.fromiter(self._server_free,
+                                              dtype=np.int64,
+                                              count=self.spec.num_servers)
+        return self._free_snapshot
+
+    def idle_server_counts(self):
+        """Per-leaf count of fully-idle servers as a numpy array."""
+        arr = self.server_free_array()
+        idle = arr == self.spec.gpus_per_server
+        return idle.reshape(self.spec.num_leafs,
+                            self.spec.servers_per_leaf).sum(axis=1)
 
     # -- capacity ----------------------------------------------------------
     def capacity(self) -> List[List[int]]:
@@ -284,11 +305,13 @@ class FabricState:
 
     # -- mutation ------------------------------------------------------------
     def allocate_gpus(self, job_id: int, gpus: List[int]) -> None:
+        owner, free, t = self.gpu_owner, self._server_free, self.spec.gpus_per_server
+        self._free_snapshot = None
         for g in gpus:
-            if not self.gpu_free(g):
-                raise ValueError(f"GPU {g} already owned by job {self.gpu_owner[g]}")
-            self.gpu_owner[g] = job_id
-            self._server_free[self.spec.server_of_gpu(g)] -= 1
+            if g in owner:
+                raise ValueError(f"GPU {g} already owned by job {owner[g]}")
+            owner[g] = job_id
+            free[g // t] -= 1
 
     def reserve_links(self, job_id: int, links: Dict[Tuple[int, int], int]) -> None:
         cap = self.capacity()
@@ -300,11 +323,25 @@ class FabricState:
             self.link_owner.setdefault((n, m), {})[job_id] = (
                 self.link_owner.get((n, m), {}).get(job_id, 0) + cnt)
 
-    def release_job(self, job_id: int) -> None:
-        for g, j in self.gpu_owner.items():
-            if j == job_id:
-                self._server_free[self.spec.server_of_gpu(g)] += 1
-        self.gpu_owner = {g: j for g, j in self.gpu_owner.items() if j != job_id}
+    def release_job(self, job_id: int,
+                    gpus: Optional[List[int]] = None) -> None:
+        """Free a job's GPUs and link reservations.  Passing the job's GPU
+        list (known from its Placement) releases in O(|gpus|) instead of
+        scanning every allocated GPU; both paths leave identical state."""
+        self._free_snapshot = None
+        if gpus is not None:
+            owner, free, t = self.gpu_owner, self._server_free, \
+                self.spec.gpus_per_server
+            for g in gpus:
+                if owner.get(g) == job_id:
+                    del owner[g]
+                    free[g // t] += 1
+        else:
+            for g, j in self.gpu_owner.items():
+                if j == job_id:
+                    self._server_free[self.spec.server_of_gpu(g)] += 1
+            self.gpu_owner = {g: j for g, j in self.gpu_owner.items()
+                              if j != job_id}
         for key in list(self.link_owner):
             self.link_owner[key].pop(job_id, None)
             if not self.link_owner[key]:

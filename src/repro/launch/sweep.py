@@ -121,6 +121,15 @@ def campaign_main(argv) -> None:
                          "synthetic workload (see repro.core.workloads)")
     ap.add_argument("--full-recompute", action="store_true",
                     help="use the full-recompute rate engine (debug)")
+    ap.add_argument("--engine", default="v2", choices=("v1", "v2"),
+                    help="simulator engine: v2 heap engine (default) or the "
+                         "v1 scan engine — bit-identical schedules")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="shard grid cells across N processes "
+                         "(deterministic merge; default: serial)")
+    ap.add_argument("--stream", action="store_true",
+                    help="streaming aggregation: bound per-cell memory to "
+                         "O(512) samples (10k-job campaigns)")
     ap.add_argument("--ilp-time-limit", type=float, default=2.0)
     ap.add_argument("--out", default=None, help="write the JSON report here")
     args = ap.parse_args(argv)
@@ -150,6 +159,8 @@ def campaign_main(argv) -> None:
         else None)
     result = run_campaign(spec, grid, workload=workload, trace=trace,
                           incremental=not args.full_recompute,
+                          engine=args.engine, workers=args.workers,
+                          store="stream" if args.stream else "full",
                           ilp_time_limit=args.ilp_time_limit,
                           ocs_spec=ocs_spec,
                           progress=lambda m: print(m, flush=True))

@@ -5,8 +5,8 @@ import json
 import numpy as np
 import pytest
 
-from repro.core import (CLUSTER512, CampaignGrid, WorkloadSpec,
-                        generate_trace, run_campaign, simulate)
+from repro.core import (CLUSTER512, CLUSTER512_OCS, CampaignGrid,
+                        WorkloadSpec, generate_trace, run_campaign, simulate)
 from repro.core.metrics import cdf
 from repro.core.scheduler import order_queue
 from repro.core.jobs import Job
@@ -16,18 +16,77 @@ from repro.core.jobs import Job
 # incremental-rate engine ≡ full-recompute baseline (the regression fixture)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.parametrize("engine", ["v1", "v2"])
 @pytest.mark.parametrize("strategy", ["ecmp", "sr", "balanced", "ocs-relax"])
-def test_incremental_rates_match_full_recompute(strategy):
+def test_incremental_rates_match_full_recompute(strategy, engine):
     """Arrival/completion events re-solve only jobs sharing a contended
     link; the schedule must be bit-identical to recomputing everything."""
     jobs = generate_trace(WorkloadSpec(num_jobs=80, mean_interarrival=100.0,
                                        seed=11, max_gpus=128))
-    inc = simulate(CLUSTER512, jobs, strategy, incremental=True)
-    full = simulate(CLUSTER512, jobs, strategy, incremental=False)
+    inc = simulate(CLUSTER512, jobs, strategy, incremental=True,
+                   engine=engine)
+    full = simulate(CLUSTER512, jobs, strategy, incremental=False,
+                    engine=engine)
     assert inc.n_finished == full.n_finished
     assert inc.jcts == full.jcts            # exact float equality, per job
     assert inc.jwts == full.jwts
     assert inc.slowdowns == full.slowdowns
+
+
+# ---------------------------------------------------------------------------
+# v2 heap engine ≡ v1 scan engine (the tentpole regression fixture)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", ["ecmp", "sr", "balanced", "vclos",
+                                      "ocs-relax"])
+def test_v2_engine_matches_v1(strategy):
+    """The lazy-deletion heap engine must replay the scan engine's schedule
+    bit-for-bit: same completions, same JCT/JWT floats, same slowdowns."""
+    jobs = generate_trace(WorkloadSpec(num_jobs=80, mean_interarrival=100.0,
+                                       seed=11, max_gpus=128))
+    v1 = simulate(CLUSTER512, jobs, strategy, engine="v1")
+    v2 = simulate(CLUSTER512, jobs, strategy, engine="v2")
+    assert v1.n_finished == v2.n_finished
+    assert v1.jcts == v2.jcts
+    assert v1.jwts == v2.jwts
+    assert v1.slowdowns == v2.slowdowns
+    assert (v1.frag_gpu, v1.frag_network) == (v2.frag_gpu, v2.frag_network)
+
+
+def test_v2_engine_matches_v1_ocs_vclos():
+    """OCS rewiring paths (xconn release, renormalisation) interleave with
+    the event loop — the heap engine must preserve the exact sequence."""
+    jobs = generate_trace(WorkloadSpec(num_jobs=60, mean_interarrival=90.0,
+                                       seed=7, max_gpus=128))
+    v1 = simulate(CLUSTER512_OCS, jobs, "ocs-vclos", engine="v1")
+    v2 = simulate(CLUSTER512_OCS, jobs, "ocs-vclos", engine="v2")
+    assert v1.n_finished == v2.n_finished
+    assert v1.jcts == v2.jcts
+    assert v1.jwts == v2.jwts
+
+
+@pytest.mark.parametrize("scheduler", ["ff", "edf"])
+def test_v2_engine_matches_v1_queueing_policies(scheduler):
+    """Placement memoisation must not change which queued job places when
+    the scheduler reorders the queue (ff/edf retry every waiting job)."""
+    jobs = generate_trace(WorkloadSpec(num_jobs=70, mean_interarrival=80.0,
+                                       seed=3, max_gpus=128,
+                                       deadline_slack=(1.5, 4.0)))
+    v1 = simulate(CLUSTER512, jobs, "ecmp", scheduler=scheduler, engine="v1")
+    v2 = simulate(CLUSTER512, jobs, "ecmp", scheduler=scheduler, engine="v2")
+    assert v1.jcts == v2.jcts
+    assert v1.jwts == v2.jwts
+
+
+def test_v2_golden_trace_jct_snapshot():
+    """Golden JCTs for the default (v2) engine — the recorded values every
+    semantic-preserving refactor must reproduce (update consciously)."""
+    jobs = generate_trace(WorkloadSpec(num_jobs=200, mean_interarrival=120.0,
+                                       seed=0, max_gpus=256))
+    golden = {"ecmp": 13417.8, "sr": 3731.4, "best": 2949.3}
+    for strat, want in golden.items():
+        got = simulate(CLUSTER512, jobs, strat, engine="v2").avg_jct
+        assert round(got, 1) == pytest.approx(want), strat
 
 
 def test_unknown_strategy_rejected():
@@ -35,6 +94,8 @@ def test_unknown_strategy_rejected():
         simulate(CLUSTER512, [], "warp-drive")
     with pytest.raises(ValueError, match="queueing policy"):
         simulate(CLUSTER512, [], "ecmp", scheduler="sjf")
+    with pytest.raises(ValueError, match="unknown engine"):
+        simulate(CLUSTER512, [], "ecmp", engine="v3")
 
 
 # ---------------------------------------------------------------------------
@@ -75,6 +136,37 @@ def test_vectorized_link_counts_match_scalar_routing():
         for link, c in counts.items():
             agg[link] = max(agg[link], c)
     assert alltoall_link_counts(routing, ranks, flow_id=9) == agg
+
+
+def test_dense_link_counts_match_counter_paths():
+    """The v2 engine's dense (LinkSpace-indexed) count builders must agree
+    entry-for-entry with the Counter-based vectorized paths."""
+    from repro.core.routing import (ECMPRouting, LinkSpace, SourceRouting,
+                                    alltoall_dense_counts,
+                                    alltoall_link_counts,
+                                    multi_phase_dense_counts,
+                                    multi_phase_link_counts)
+
+    spec = CLUSTER512
+    ls = LinkSpace(spec)
+    rng = np.random.default_rng(5)
+    src = rng.integers(0, spec.num_gpus, 400).astype(np.int64)
+    dst = rng.integers(0, spec.num_gpus, 400).astype(np.int64)
+    pidx = rng.integers(0, 5, 400).astype(np.int64)
+    ranks = sorted(rng.choice(spec.num_gpus, 24, replace=False).tolist())
+    for routing in (ECMPRouting(spec, seed=2), SourceRouting(spec)):
+        counters = multi_phase_link_counts(routing, src, dst, pidx, 5, 3)
+        dense = multi_phase_dense_counts(routing, ls, src, dst, pidx, 5, 3)
+        assert dense.shape == (5, ls.nlinks)
+        for c, row in zip(counters, dense):
+            assert sum(c.values()) == row.sum()
+            for link, cnt in c.items():
+                assert row[ls.id_of(link)] == cnt
+        agg_c = alltoall_link_counts(routing, ranks, flow_id=9)
+        agg_d = alltoall_dense_counts(routing, ls, ranks, flow_id=9)
+        for link, cnt in agg_c.items():
+            assert agg_d[ls.id_of(link)] == cnt
+        assert agg_d.sum() == sum(agg_c.values())
 
 
 def test_ar_phase_arrays_match_ar_phases():
@@ -183,6 +275,55 @@ def test_campaign_cdfs_and_json():
     assert min(xs) >= 1.0 - 1e-9            # slowdown is ≥ 1 by definition
     blob = json.dumps(res.to_json())        # fully serialisable
     assert "jct_cdfs" in blob
+
+
+def test_campaign_parallel_workers_match_serial():
+    """Cells sharded across a process pool merge in grid order with
+    bit-identical per-cell schedules (seed-stable, deterministic merge)."""
+    grid = CampaignGrid(strategies=("ecmp", "sr"), loads=(150.0,),
+                        seeds=(0, 1))
+    wl = WorkloadSpec(num_jobs=40, max_gpus=64)
+    ser = run_campaign(CLUSTER512, grid, workload=wl)
+    par = run_campaign(CLUSTER512, grid, workload=wl, workers=2)
+    assert [(c.strategy, c.scheduler, c.load, c.seed) for c in ser.cells] \
+        == [(c.strategy, c.scheduler, c.load, c.seed) for c in par.cells]
+    for a, b in zip(ser.cells, par.cells):
+        assert a.report.jcts == b.report.jcts
+        assert a.report.jwts == b.report.jwts
+
+
+def test_campaign_streaming_store():
+    """store="stream" bounds per-cell memory: ≤ max_samples order stats,
+    exact pooled means (weighted scalars), approximate percentiles."""
+    grid = CampaignGrid(strategies=("ecmp",), loads=(150.0,), seeds=(0, 1))
+    wl = WorkloadSpec(num_jobs=60, max_gpus=64)
+    full = run_campaign(CLUSTER512, grid, workload=wl)
+    stream = run_campaign(CLUSTER512, grid, workload=wl, store="stream")
+    for c in stream.cells:
+        assert c.report.condensed
+        assert len(c.report.jcts) <= 512
+    rf = full.aggregate()[0]
+    rs = stream.aggregate()[0]
+    assert rs["jct_mean"] == pytest.approx(rf["jct_mean"], rel=1e-12)
+    assert rs["queue_delay_mean"] == pytest.approx(rf["queue_delay_mean"],
+                                                   rel=1e-12)
+    assert rs["contention_ratio_mean"] == pytest.approx(
+        rf["contention_ratio_mean"], rel=1e-12)
+    assert rs["jct_p99"] == pytest.approx(rf["jct_p99"], rel=0.05)
+    json.dumps(stream.to_json())            # still fully serialisable
+    with pytest.raises(ValueError, match="store"):
+        run_campaign(CLUSTER512, grid, workload=wl, store="bogus")
+
+
+def test_metrics_condense_small_report_lossless():
+    from repro.core.metrics import MetricsReport
+    rep = MetricsReport(1, 1, 1, 0, 1, 3, jcts=[3.0, 1.0, 2.0],
+                        jwts=[0.5, 0.1, 0.2], slowdowns=[1.1, 1.0, 1.3])
+    rep.condense(max_samples=8)
+    assert rep.condensed
+    assert rep.jcts == [1.0, 2.0, 3.0]      # below the cap: just sorted
+    assert rep.slowdown_mean == pytest.approx(np.mean([1.1, 1.0, 1.3]))
+    assert rep.n_slowdowns == 3
 
 
 def test_campaign_explicit_trace():

