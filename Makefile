@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test bench-smoke bench docs-lint check
+.PHONY: test bench-smoke bench bench-gate docs-lint check
 
 test:            ## tier-1 verification (what CI gates on)
 	$(PY) -m pytest -x -q
@@ -10,8 +10,12 @@ test:            ## tier-1 verification (what CI gates on)
 bench-smoke:     ## ~60s campaign smoke: v2-vs-v1 speedup, JCT identity, parallel path
 	$(PY) -m benchmarks.bench_campaign
 
-bench-json:      ## campaign + scale + fairshare benches -> BENCH_campaign.json
+bench-json:      ## campaign + scale + fairshare benches -> BENCH_campaign.json (+ gate)
 	$(PY) -m benchmarks.run --only campaign,scale,fairshare --json
+	$(PY) scripts/bench_gate.py
+
+bench-gate:      ## fail if the committed BENCH_campaign.json lost the 5x target
+	$(PY) scripts/bench_gate.py
 
 bench:           ## every paper table/figure benchmark
 	$(PY) -m benchmarks.run
@@ -19,4 +23,4 @@ bench:           ## every paper table/figure benchmark
 docs-lint:       ## README/docs stay honest against the code
 	$(PY) scripts/docs_lint.py
 
-check: docs-lint test   ## lint + tests
+check: docs-lint bench-gate test   ## lint + perf gate + tests

@@ -1,0 +1,62 @@
+#!/usr/bin/env python
+"""Perf gate: fail when the recorded campaign benchmark regresses.
+
+Reads the committed ``BENCH_campaign.json`` (written by ``make bench-json``
+via the paired-median protocol — never single timings on this noisy box)
+and exits non-zero when:
+
+  1. ``campaign_engine[overall].meets_5x_vs_seed_baseline`` is false —
+     the v2 heap engine lost its 5x geomean over the seed full-recompute
+     algorithm on the gated strategies (ecmp, sr), or
+  2. any per-strategy ``identical_jct`` flag is false — the engines
+     stopped producing bit-identical schedules, or
+  3. the parallel 2-worker cell stopped merging identically to serial.
+
+Run: python scripts/bench_gate.py [PATH]   (or: make bench-gate)
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def main() -> int:
+    path = Path(sys.argv[1]) if len(sys.argv) > 1 \
+        else ROOT / "BENCH_campaign.json"
+    if not path.exists():
+        print(f"bench-gate: FAILED — {path} missing (run `make bench-json`)")
+        return 1
+    summary = json.loads(path.read_text()).get("engine_summary", {})
+    errors = []
+
+    overall = summary.get("campaign_engine[overall]")
+    if overall is None:
+        errors.append("campaign_engine[overall] row missing")
+    elif not overall.get("meets_5x_vs_seed_baseline"):
+        errors.append(
+            f"meets_5x_vs_seed_baseline regressed to false "
+            f"(geomean vs seed: "
+            f"{overall.get('speedup_vs_seed_full_recompute')}x)")
+
+    for name, row in sorted(summary.items()):
+        if "identical_jct" in row and not row["identical_jct"]:
+            errors.append(f"{name}: engines no longer bit-identical")
+        if "identical_to_serial" in row and not row["identical_to_serial"]:
+            errors.append(f"{name}: parallel merge no longer matches serial")
+
+    if errors:
+        print("bench-gate: FAILED")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print(f"bench-gate: OK ({overall['speedup_vs_seed_full_recompute']}x "
+          f"geomean vs seed baseline, engines bit-identical)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,7 +2,7 @@
 """Documentation lint: keep README/docs honest against the code.
 
 Checks:
-  1. required docs exist (README.md, docs/architecture.md, docs/simulator.md)
+  1. required docs exist (README, docs/{architecture,simulator,strategies}.md)
   2. every `src/...` path mentioned in them exists on disk
   3. relative markdown links resolve
   4. the README strategy glossary covers every simulator strategy
@@ -18,7 +18,8 @@ import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
-DOCS = ["README.md", "docs/architecture.md", "docs/simulator.md"]
+DOCS = ["README.md", "docs/architecture.md", "docs/simulator.md",
+        "docs/strategies.md"]
 
 errors: list[str] = []
 

@@ -7,6 +7,8 @@ Layers:
   patterns   — Leaf-wise Permutation (Definition 1) checker
   placement  — vClos stages 0-2 + FINDVCLOS ILP (Algorithm 1/3)
   ocs        — OCS-vClos stages + rewiring planner (Algorithm 2/4)
+  strategies — pluggable Strategy registry (builtins + contention-affinity)
+  config     — SimConfig: unified simulate()/campaign configuration
   fairshare  — max-min fair water-filling (numpy + JAX)
   jobs       — DML workload profiles + dataset generators
   workloads  — reproducible Poisson/CSV arrival traces for campaigns
@@ -28,8 +30,10 @@ from .routing import (BalancedECMPRouting, ContentionReport, ECMPRouting,
                       contention_histogram)
 from .patterns import is_leafwise_permutation, all_phases_leafwise
 from .placement import (Placement, PlacementFailure, VirtualClos, commit,
-                        find_vclos, release, vclos_place)
-from .ocs import RewirePlanner, ocs_release, ocs_vclos_place
+                        find_vclos, release, stage0_server, stage1_leaf,
+                        vclos_place)
+from .ocs import (RewirePlanner, collect_idle_servers, ocs_release,
+                  ocs_vclos_place)
 from .fairshare import maxmin_fair, maxmin_fair_jax, maxmin_fair_numpy
 from .jobs import (BATCHES, PROFILES, Job, ModelProfile, cluster_dataset,
                    testbed_dataset, weighted_choice, HELIOS_SIZE_MIX,
@@ -37,7 +41,11 @@ from .jobs import (BATCHES, PROFILES, Job, ModelProfile, cluster_dataset,
 from .workloads import (SIZE_MIXES, WorkloadSpec, generate_trace, load_trace_csv,
                         poisson_trace, save_trace_csv, trace_stats)
 from .metrics import MetricsReport, cdf, job_metrics
-from .simulator import ENGINES, STRATEGIES, ClusterSimulator, simulate
+from .strategies import (Strategy, get_strategy, register_strategy,
+                         registered_strategies, strategy_names,
+                         unregister_strategy)
+from .config import ENGINES, STORES, SimConfig
+from .simulator import STRATEGIES, ClusterSimulator, simulate
 from .campaign import (CampaignGrid, CampaignResult, CellResult, run_campaign)
 from .scheduler import (Grant, IsolatedScheduler, QUEUE_POLICIES, order_queue)
 from .rankmap import leaf_contiguous_order, mesh_device_order

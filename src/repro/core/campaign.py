@@ -29,10 +29,12 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .config import SimConfig
 from .jobs import Job
 from .metrics import MetricsReport, cdf
-from .simulator import STRATEGIES, simulate
+from .simulator import simulate
 from .scheduler import QUEUE_POLICIES
+from .strategies import get_strategy
 from .topology import ClusterSpec
 from .workloads import WorkloadSpec, generate_trace, trace_stats
 
@@ -51,12 +53,19 @@ class CampaignGrid:
         for axis in ("strategies", "schedulers", "loads", "seeds"):
             if not getattr(self, axis):
                 raise ValueError(f"campaign grid axis {axis!r} is empty")
-        for s in self.strategies:
-            if s not in STRATEGIES:
-                raise ValueError(f"unknown strategy {s!r}")
         for q in self.schedulers:
             if q not in QUEUE_POLICIES:
                 raise ValueError(f"unknown queueing policy {q!r}")
+        # resolve every strategy (raises listing registered names) and
+        # fail fast on incompatible strategy × scheduler cells: a mid
+        # -campaign ValueError would discard every completed cell's work
+        for s in self.strategies:
+            strat = get_strategy(s)
+            for q in self.schedulers:
+                if q not in strat.queue_policies:
+                    raise ValueError(
+                        f"strategy {s!r} does not support queueing policy "
+                        f"{q!r}; it supports {strat.queue_policies}")
 
     def cells(self):
         for load in self.loads:
@@ -199,18 +208,18 @@ class CampaignResult:
             json.dump(self.to_json(), f, indent=1, sort_keys=True)
 
 
-def _run_cell(spec: ClusterSpec, strat: str, sched: str, seed: int,
-              trace: List[Job], incremental: bool, engine: str,
-              ilp_time_limit: float, store: str) -> Tuple[MetricsReport, float]:
+def _run_cell(spec: ClusterSpec, trace: List[Job],
+              config: SimConfig) -> Tuple[MetricsReport, float]:
     """One grid cell — top-level so ``ProcessPoolExecutor`` can pickle it.
+    ``config`` is already cell-resolved in the parent: the strategy
+    travels by registry name (never as an instance, which might not
+    pickle) and is re-resolved against the registry inside the worker.
     Streaming cells condense inside the worker, so only O(max_samples)
     floats cross the process boundary (and stay resident in the parent)."""
     t0 = time.time()
-    rep = simulate(spec, trace, strat, scheduler=sched, seed=seed,
-                   ilp_time_limit=ilp_time_limit, incremental=incremental,
-                   engine=engine)
+    rep = simulate(spec, trace, config=config)
     dt = time.time() - t0
-    if store == "stream":
+    if config.store == "stream":
         rep.condense()
     return rep, dt
 
@@ -218,13 +227,14 @@ def _run_cell(spec: ClusterSpec, strat: str, sched: str, seed: int,
 def run_campaign(spec: ClusterSpec, grid: CampaignGrid,
                  workload: Optional[WorkloadSpec] = None,
                  trace: Optional[Sequence[Job]] = None,
-                 incremental: bool = True,
-                 engine: str = "v2",
+                 incremental: Optional[bool] = None,
+                 engine: Optional[str] = None,
                  workers: Optional[int] = None,
-                 store: str = "full",
-                 ilp_time_limit: float = 2.0,
+                 store: Optional[str] = None,
+                 ilp_time_limit: Optional[float] = None,
                  ocs_spec: Optional[ClusterSpec] = None,
                  progress: Optional[Callable[[str], None]] = None,
+                 config: Optional[SimConfig] = None,
                  ) -> CampaignResult:
     """Sweep every grid cell over a shared trace and aggregate the metrics.
 
@@ -248,22 +258,35 @@ def run_campaign(spec: ClusterSpec, grid: CampaignGrid,
     (:meth:`repro.core.metrics.MetricsReport.condense`) so 10k-job
     campaigns hold O(512) floats per cell.
 
-    ``ocs_spec`` — cluster used for ``ocs-vclos`` / ``ocs-relax`` cells
-    (defaults to ``spec``; pass the ``*_OCS`` preset so those strategies
-    have circuits to rewire).
+    ``ocs_spec`` — cluster used for cells whose strategy asks for it
+    (``Strategy.wants_ocs_spec``: ``ocs-vclos`` / ``ocs-relax``; defaults
+    to ``spec`` — pass the ``*_OCS`` preset so those strategies have
+    circuits to rewire).
+
+    ``config`` — a :class:`repro.core.config.SimConfig` carrying the
+    engine/incremental/workers/store/ilp_time_limit knobs in one object
+    (its per-cell fields — strategy, scheduler, seed — are overridden by
+    the grid).  Loose kwargs explicitly passed alongside it override the
+    matching config fields; omitted ones keep the config's values.
     """
+    config = (config or SimConfig()).with_overrides(
+        incremental=incremental, engine=engine, workers=workers,
+        store=store, ilp_time_limit=ilp_time_limit)
     if trace is not None and len(grid.loads) > 1:
         raise ValueError("an explicit trace fixes the arrival process; "
                          "use a single-entry loads axis")
-    if "ocs-vclos" in grid.strategies:
+    needs_ocs = [s for s in grid.strategies if get_strategy(s).requires_ocs]
+    if needs_ocs:
         eff = ocs_spec if ocs_spec is not None else spec
         if not eff.num_ocs:
             raise ValueError(
-                "ocs-vclos needs an OCS-equipped cluster: pass ocs_spec= "
-                "(e.g. CLUSTER512_OCS) or a spec with num_ocs > 0")
+                f"{needs_ocs[0]} needs an OCS-equipped cluster: pass "
+                f"ocs_spec= (e.g. CLUSTER512_OCS) or a spec with "
+                f"num_ocs > 0")
     if trace is not None:
         uses_ocs_spec = (ocs_spec is not None and
-                         any(s.startswith("ocs") for s in grid.strategies))
+                         any(get_strategy(s).wants_ocs_spec
+                             for s in grid.strategies))
         limit = min([spec.num_gpus]
                     + ([ocs_spec.num_gpus] if uses_ocs_spec else []))
         for j in trace:
@@ -272,15 +295,13 @@ def run_campaign(spec: ClusterSpec, grid: CampaignGrid,
                     f"trace job {j.job_id} wants {j.num_gpus} GPUs but the "
                     f"cluster has {limit}; it could never be placed and "
                     f"would starve FIFO campaigns")
-    if store not in ("full", "stream"):
-        raise ValueError(f"unknown store mode {store!r}; "
-                         "choose 'full' or 'stream'")
     if workload is None:
         workload = WorkloadSpec(num_jobs=500, max_gpus=spec.num_gpus)
     result = CampaignResult(spec=spec, grid=grid)
     t0 = time.time()
     traces: Dict[Tuple[float, int], List[Job]] = {}
-    cells: List[Tuple[str, str, float, int, ClusterSpec, List[Job]]] = []
+    cells: List[Tuple[str, str, float, int, ClusterSpec, List[Job],
+                      SimConfig]] = []
     for strat, sched, load, seed in grid.cells():
         tkey = (load, seed)
         if tkey not in traces:
@@ -289,8 +310,14 @@ def run_campaign(spec: ClusterSpec, grid: CampaignGrid,
             result.trace_info[f"load={load:g},seed={seed}"] = \
                 trace_stats(traces[tkey])
         cell_spec = ocs_spec if (ocs_spec is not None and
-                                 strat.startswith("ocs")) else spec
-        cells.append((strat, sched, load, seed, cell_spec, traces[tkey]))
+                                 get_strategy(strat).wants_ocs_spec) else spec
+        # resolve the per-cell config here in the parent: the grid's name
+        # replaces whatever config.strategy held (possibly an unpicklable
+        # Strategy instance), so workers always receive plain scalars
+        cell_cfg = dataclasses.replace(config, strategy=strat,
+                                       scheduler=sched, seed=seed)
+        cells.append((strat, sched, load, seed, cell_spec, traces[tkey],
+                      cell_cfg))
 
     def record(strat, sched, load, seed, rep, dt):
         result.cells.append(CellResult(strat, sched, load, seed, rep, dt))
@@ -299,22 +326,19 @@ def run_campaign(spec: ClusterSpec, grid: CampaignGrid,
                      f"JCT {rep.avg_jct:.1f}s (n={rep.n_finished}) "
                      f"in {dt:.2f}s")
 
-    if workers and workers > 1:
+    if config.workers and config.workers > 1:
         from concurrent.futures import ProcessPoolExecutor
-        with ProcessPoolExecutor(max_workers=workers) as pool:
-            futs = [pool.submit(_run_cell, cell_spec, strat, sched, seed,
-                                tr, incremental, engine, ilp_time_limit,
-                                store)
-                    for strat, sched, load, seed, cell_spec, tr in cells]
+        with ProcessPoolExecutor(max_workers=config.workers) as pool:
+            futs = [pool.submit(_run_cell, cell_spec, tr, cfg)
+                    for *_cell, cell_spec, tr, cfg in cells]
             # merge in submission (= grid) order: deterministic regardless
             # of which worker finishes first
-            for (strat, sched, load, seed, _, _), fut in zip(cells, futs):
+            for (strat, sched, load, seed, *_), fut in zip(cells, futs):
                 rep, dt = fut.result()
                 record(strat, sched, load, seed, rep, dt)
     else:
-        for strat, sched, load, seed, cell_spec, tr in cells:
-            rep, dt = _run_cell(cell_spec, strat, sched, seed, tr,
-                                incremental, engine, ilp_time_limit, store)
+        for strat, sched, load, seed, cell_spec, tr, cfg in cells:
+            rep, dt = _run_cell(cell_spec, tr, cfg)
             record(strat, sched, load, seed, rep, dt)
     result.wall_time = time.time() - t0
     return result

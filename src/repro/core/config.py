@@ -1,0 +1,76 @@
+"""Unified simulation configuration (:class:`SimConfig`).
+
+One frozen dataclass replaces the kwarg sprawl that used to be threaded
+separately through ``ClusterSimulator``, ``simulate()``, ``run_campaign()``
+and the ``sweep campaign`` CLI.  Every legacy loose-kwarg call site keeps
+working — the entry points build a ``SimConfig`` behind the scenes — so a
+config object and the equivalent kwargs produce bit-identical schedules
+(``tests/test_strategies.py::test_simconfig_matches_legacy_kwargs``).
+
+Validation happens at construction: strategy names resolve against the
+live plugin registry (:mod:`repro.core.strategies`), so error messages
+enumerate runtime-registered strategies too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Optional, Union
+
+from .scheduler import QUEUE_POLICIES
+from .strategies import Strategy, get_strategy
+
+#: simulator engines — ``v1`` scan engine, ``v2`` heap engine (default);
+#: bit-identical schedules (see docs/simulator.md)
+ENGINES = ("v1", "v2")
+#: campaign per-cell sample stores — keep everything vs condense to
+#: bounded-size order statistics
+STORES = ("full", "stream")
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    """Everything about *how* to simulate, minus the cluster and the jobs.
+
+    ``strategy`` may be a registered name or a :class:`Strategy` instance
+    (handy for unregistered test doubles; campaigns require names so
+    worker processes can resolve them).  ``workers`` / ``store`` only
+    apply to campaigns; single runs ignore them.
+    """
+
+    strategy: Union[str, Strategy] = "vclos"
+    scheduler: str = "fifo"
+    seed: int = 0
+    ilp_time_limit: float = 2.0
+    incremental: bool = True
+    engine: str = "v2"
+    max_time: float = math.inf
+    # campaign-only knobs
+    workers: Optional[int] = None
+    store: str = "full"
+
+    def __post_init__(self) -> None:
+        get_strategy(self.strategy)   # raises listing registered names
+        if self.scheduler not in QUEUE_POLICIES:
+            raise ValueError(f"unknown queueing policy {self.scheduler!r}; "
+                             f"choose from {QUEUE_POLICIES}")
+        if self.engine not in ENGINES:
+            raise ValueError(f"unknown engine {self.engine!r}; "
+                             f"choose from {ENGINES}")
+        if self.store not in STORES:
+            raise ValueError(f"unknown store mode {self.store!r}; "
+                             f"choose 'full' or 'stream'")
+
+    def resolve_strategy(self) -> Strategy:
+        """The registry instance behind :attr:`strategy`."""
+        return get_strategy(self.strategy)
+
+    def with_overrides(self, **overrides) -> "SimConfig":
+        """A copy with every non-``None`` override applied — the shared
+        precedence rule of the entry points: explicit loose kwargs passed
+        *alongside* a config override that config's fields; omitted ones
+        (``None``) keep the config's values."""
+        kept = {k: v for k, v in overrides.items() if v is not None}
+        return dataclasses.replace(self, **kept) if kept else self

@@ -28,7 +28,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from .placement import (Placement, PlacementFailure, VirtualClos,
-                        _stage0_server, _stage1_leaf, _factorizations,
+                        stage0_server, stage1_leaf, _factorizations,
                         candidate_sizes)
 from .topology import ClusterSpec, FabricState
 
@@ -230,9 +230,10 @@ class RewirePlanner:
 # Stage 2: single spine (incl. 2-leaf direct)
 # ---------------------------------------------------------------------------
 
-def _collect_servers(state: FabricState, n_servers: int,
-                     max_leafs: Optional[int] = None) -> Optional[List[int]]:
-    """Pick idle servers best-fit across leafs (fewest idle servers first)."""
+def collect_idle_servers(state: FabricState, n_servers: int,
+                         max_leafs: Optional[int] = None) -> Optional[List[int]]:
+    """Pick idle servers best-fit across leafs (fewest idle servers first).
+    Public building block for strategy plugins (docs/strategies.md)."""
     counts = state.idle_server_counts()
     by_leaf = sorted((int(c), n) for n, c in enumerate(counts.tolist()) if c)
     servers: List[int] = []
@@ -249,11 +250,15 @@ def _collect_servers(state: FabricState, n_servers: int,
     return None
 
 
+# deprecated alias (pre-registry name)
+_collect_servers = collect_idle_servers
+
+
 def _stage2_single_spine(state: FabricState, job_id: int,
                          n: int) -> Optional[Placement]:
     spec = state.spec
     req_servers = math.ceil(n / spec.gpus_per_server)
-    servers = _collect_servers(state, req_servers)
+    servers = collect_idle_servers(state, req_servers)
     if servers is None:
         return None
     leafs_cnt: Dict[int, int] = {}
@@ -505,9 +510,9 @@ def renormalize(state: FabricState, max_moves: int = 64) -> None:
 def ocs_vclos_place(state: FabricState, job_id: int, n: int):
     spec = state.spec
     if n <= spec.gpus_per_server:
-        p = _stage0_server(state, job_id, n)
+        p = stage0_server(state, job_id, n)
         return p if p else PlacementFailure("gpu")
-    p = _stage1_leaf(state, job_id, n)
+    p = stage1_leaf(state, job_id, n)
     if p is not None:
         return p
     p = _stage2_single_spine(state, job_id, n)

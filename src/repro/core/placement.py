@@ -68,11 +68,12 @@ class PlacementFailure:
 # Stage 0 / Stage 1 heuristics
 # ---------------------------------------------------------------------------
 
-def _stage0_server(state: FabricState, job_id: int, n: int) -> Optional[Placement]:
+def stage0_server(state: FabricState, job_id: int, n: int) -> Optional[Placement]:
     """Best-fit into the server with the fewest idle GPUs that still fits.
 
     Vectorized over the maintained per-server idle counts; ``argmin`` keeps
-    the scalar loop's tie-break (lowest server id among the best fits)."""
+    the scalar loop's tie-break (lowest server id among the best fits).
+    Public building block for strategy plugins (docs/strategies.md)."""
     free = state.server_free_array()
     cand = np.flatnonzero(free >= n)
     if not len(cand):
@@ -82,8 +83,9 @@ def _stage0_server(state: FabricState, job_id: int, n: int) -> Optional[Placemen
     return Placement(job_id, gpus, "server")
 
 
-def _stage1_leaf(state: FabricState, job_id: int, n: int) -> Optional[Placement]:
-    """Best-fit under one leaf; whole idle servers only (locality, §6.1)."""
+def stage1_leaf(state: FabricState, job_id: int, n: int) -> Optional[Placement]:
+    """Best-fit under one leaf; whole idle servers only (locality, §6.1).
+    Public building block for strategy plugins (docs/strategies.md)."""
     spec = state.spec
     req_servers = math.ceil(n / spec.gpus_per_server)
     counts = state.idle_server_counts()
@@ -288,9 +290,9 @@ def vclos_place(state: FabricState, job_id: int, n: int,
     resource ("gpu" vs "network") for the paper's Table-2 accounting."""
     spec = state.spec
     if n <= spec.gpus_per_server:
-        p = _stage0_server(state, job_id, n)
+        p = stage0_server(state, job_id, n)
         return p if p else PlacementFailure("gpu")
-    p = _stage1_leaf(state, job_id, n)
+    p = stage1_leaf(state, job_id, n)
     if p is not None:
         return p
     p = find_vclos(state, job_id, n, use_ilp, ilp_time_limit)
@@ -300,6 +302,11 @@ def vclos_place(state: FabricState, job_id: int, n: int,
     idle_servers = sum(1 for sv in range(spec.num_servers) if state.server_idle(sv))
     need = math.ceil(n / spec.gpus_per_server)
     return PlacementFailure("network" if idle_servers >= need else "gpu")
+
+
+# deprecated aliases (pre-registry names; strategy plugins use the public ones)
+_stage0_server = stage0_server
+_stage1_leaf = stage1_leaf
 
 
 def commit(state: FabricState, p: Placement) -> None:

@@ -19,9 +19,8 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 from .jobs import Job
-from .ocs import ocs_release, ocs_vclos_place
-from .placement import (Placement, PlacementFailure, commit, release,
-                        vclos_place, _stage0_server, _stage1_leaf)
+from .ocs import ocs_release
+from .placement import Placement, PlacementFailure, commit, release
 from .routing import SourceRouting
 from .topology import ClusterSpec, FabricState
 
@@ -55,24 +54,39 @@ class Grant:
 
 
 class IsolatedScheduler:
+    """Launcher-facing facade over any *grantable* registered strategy
+    (``Strategy.grantable`` — placements realisable as contention-free
+    grants on real hardware: ``vclos``, ``ocs-vclos``, and any plugin
+    that sets the flag).  The facade itself is the placement context the
+    strategy sees (``spec`` / ``state`` / ``seed`` / ``ilp_time_limit``)."""
+
     def __init__(self, spec: ClusterSpec, strategy: str = "vclos",
-                 ilp_time_limit: float = 5.0):
-        if strategy not in ("vclos", "ocs-vclos"):
-            raise ValueError("IsolatedScheduler serves isolated strategies; "
-                             "use ClusterSimulator for baselines")
+                 ilp_time_limit: float = 5.0, seed: int = 0):
+        # local import: repro.core.strategies imports QUEUE_POLICIES from
+        # this module, so the registry must load lazily here
+        from .strategies import get_strategy
+        strat = get_strategy(strategy)
+        if not strat.grantable:
+            raise ValueError(
+                f"IsolatedScheduler serves grantable isolated strategies; "
+                f"{strat.name!r} is simulation-only — "
+                f"use ClusterSimulator for baselines")
         self.spec = spec
-        self.strategy = strategy
+        self.strategy_obj = strat
+        self.strategy = strat.name
         self.ilp_time_limit = ilp_time_limit
+        self.seed = seed
         self.state = FabricState(spec)
         self.grants: Dict[int, Grant] = {}
         self.last_failure: Optional[str] = None
 
-    def submit(self, job_id: int, num_gpus: int) -> Optional[Grant]:
-        if self.strategy == "ocs-vclos":
-            res = ocs_vclos_place(self.state, job_id, num_gpus)
+    def submit(self, job_id: int, num_gpus: int,
+               job: Optional[Job] = None) -> Optional[Grant]:
+        # the fast-fail every placement context owes Strategy.place
+        if self.state.num_free_gpus() < num_gpus:
+            res: object = PlacementFailure("gpu")
         else:
-            res = vclos_place(self.state, job_id, num_gpus,
-                              ilp_time_limit=self.ilp_time_limit)
+            res = self.strategy_obj.place(self, job_id, num_gpus, job=job)
         if isinstance(res, PlacementFailure):
             self.last_failure = res.reason
             return None

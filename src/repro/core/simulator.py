@@ -28,7 +28,12 @@ invariant that lets v2 cache each completion in a heap entry.  v1 and v2
 therefore produce bit-identical schedules (asserted per-strategy by
 ``tests/test_campaign.py`` and ``benchmarks/bench_campaign.py``).
 
-Per-strategy behaviour:
+Strategies are **plugins**: every per-strategy decision (routing factory,
+placement, isolation, failure memoisation, queue-policy compatibility)
+lives on a :class:`repro.core.strategies.Strategy` registered in
+:mod:`repro.core.strategies` — the engines dispatch through the registry
+instance and hold no strategy ``if`` chains.  The bundled plugins:
+
   * ``best``       — ideal single-switch: no fabric, share = 1 (upper bound)
   * ``sr``         — source routing, locality-packed placement, no isolation
   * ``ecmp``       — 5-tuple-hash routing (the contention baseline)
@@ -37,6 +42,8 @@ Per-strategy behaviour:
   * ``ocs-vclos``  — vClos + OCS rewiring of idle circuits
   * ``ocs-relax``  — OCS-vClos with the locality constraint relaxed
                       (Table 5's cautionary column)
+  * ``contention-affinity`` — CASSINI-style least-overlap placement over
+                      ECMP routing (registered via the public plugin API)
 
 Queueing policies: ``fifo`` (strict head-of-line), ``ff`` (fewest-GPU
 first), ``edf`` (earliest deadline first) — §9.7 (see
@@ -48,29 +55,74 @@ from __future__ import annotations
 import heapq
 import math
 from collections import Counter
+from collections.abc import Sequence as _SequenceABC
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from .config import ENGINES, SimConfig
 from .fairshare import phase_worst_loads
 from .jobs import GBPS, Job
 from .metrics import MetricsReport, job_metrics
-from .ocs import _collect_servers, ocs_release, ocs_vclos_place
-from .placement import (Placement, PlacementFailure, commit, release,
-                        vclos_place, _stage0_server, _stage1_leaf)
-from .routing import (BalancedECMPRouting, ECMPRouting, IdealRouting,
-                      LinkSpace, Routing, SourceRouting, a2a_step_flows,
+from .ocs import ocs_release
+from .placement import Placement, PlacementFailure, commit, release
+from .routing import (LinkSpace, SourceRouting, a2a_step_flows,
                       alltoall_link_counts, multi_phase_dense_counts,
                       multi_phase_link_counts)
-from .scheduler import QUEUE_POLICIES, order_queue
+from .scheduler import order_queue
+from .strategies import Strategy, strategy_names
 from .topology import ClusterSpec, FabricState
 
 NVLINK_SPEEDUP = 12.0  # intra-server fabric vs one NIC (Tbps NVLink vs 100G)
 
-STRATEGIES = ("best", "sr", "ecmp", "balanced", "vclos", "ocs-vclos",
-              "ocs-relax")
-ENGINES = ("v1", "v2")
+
+class _StrategyNamesView(_SequenceABC):
+    """Deprecated alias for the strategy registry.
+
+    ``repro.core.simulator.STRATEGIES`` used to be a frozen tuple; it is
+    now a live read-only view of
+    :func:`repro.core.strategies.strategy_names`, so runtime-registered
+    plugins appear immediately and the alias can never drift from the
+    registry (asserted by ``tests/test_strategies.py``).  Prefer the
+    registry API in new code.
+    """
+
+    def __len__(self) -> int:
+        return len(strategy_names())
+
+    def __getitem__(self, i):
+        return strategy_names()[i]
+
+    def __iter__(self):
+        return iter(strategy_names())
+
+    def __contains__(self, item) -> bool:
+        return item in strategy_names()
+
+    def __eq__(self, other) -> bool:
+        try:
+            return tuple(self) == tuple(other)
+        except TypeError:
+            return NotImplemented
+
+    # tuple drop-in compatibility for concatenation; hashing stays
+    # disabled (like a list) — a live view's hash would drift whenever a
+    # plugin registers, silently breaking dict/set lookups.  Snapshot
+    # with tuple(STRATEGIES) when a hashable value is needed.
+    __hash__ = None  # type: ignore[assignment]
+
+    def __add__(self, other) -> tuple:
+        return tuple(self) + tuple(other)
+
+    def __radd__(self, other) -> tuple:
+        return tuple(other) + tuple(self)
+
+    def __repr__(self) -> str:
+        return repr(strategy_names())
+
+
+STRATEGIES = _StrategyNamesView()
 
 
 # ---------------------------------------------------------------------------
@@ -181,28 +233,57 @@ def _finish_time(rj, now: float) -> float:
 # ---------------------------------------------------------------------------
 
 class ClusterSimulator:
-    def __init__(self, spec: ClusterSpec, strategy: str = "vclos",
-                 scheduler: str = "fifo", seed: int = 0,
-                 ilp_time_limit: float = 2.0, incremental: bool = True,
-                 engine: str = "v2"):
-        if strategy not in STRATEGIES:
-            raise ValueError(f"unknown strategy {strategy!r}; "
-                             f"choose from {STRATEGIES}")
-        if scheduler not in QUEUE_POLICIES:
-            raise ValueError(f"unknown queueing policy {scheduler!r}; "
-                             f"choose from {QUEUE_POLICIES}")
-        if engine not in ENGINES:
-            raise ValueError(f"unknown engine {engine!r}; "
-                             f"choose from {ENGINES}")
+    """The engine pair behind :func:`simulate`.
+
+    Configuration arrives either as legacy loose kwargs or as one
+    :class:`repro.core.config.SimConfig` (``config=``; loose kwargs
+    explicitly passed alongside it override the matching config fields,
+    omitted ones keep the config's values — the same precedence rule as
+    :func:`simulate`).  All per-strategy behaviour dispatches through the
+    :class:`repro.core.strategies.Strategy` resolved from the registry;
+    the simulator itself is also the *placement context* handed to
+    ``Strategy.place`` (``spec`` / ``state`` / ``seed`` /
+    ``ilp_time_limit`` plus the :meth:`dense_link_load` /
+    :meth:`leaf_link_load` traffic views).
+    """
+
+    def __init__(self, spec: ClusterSpec, strategy=None,
+                 scheduler: Optional[str] = None, seed: Optional[int] = None,
+                 ilp_time_limit: Optional[float] = None,
+                 incremental: Optional[bool] = None,
+                 engine: Optional[str] = None,
+                 config: Optional[SimConfig] = None):
+        # one precedence rule, shared with simulate(): every loose kwarg
+        # explicitly passed alongside a config overrides that config field
+        # (how campaigns sweep one base config); omitted kwargs keep the
+        # config's values, and without a config they take SimConfig defaults
+        if config is None:
+            config = SimConfig()
+        config = config.with_overrides(strategy=strategy, scheduler=scheduler,
+                                       seed=seed,
+                                       ilp_time_limit=ilp_time_limit,
+                                       incremental=incremental, engine=engine)
+        strat = config.resolve_strategy()
+        if config.scheduler not in strat.queue_policies:
+            raise ValueError(
+                f"strategy {strat.name!r} does not support queueing policy "
+                f"{config.scheduler!r}; it supports {strat.queue_policies}")
+        if strat.requires_ocs and not spec.num_ocs:
+            raise ValueError(
+                f"strategy {strat.name!r} needs an OCS-equipped cluster "
+                f"(spec.num_ocs > 0), e.g. the *_OCS presets")
         self.spec = spec
-        self.strategy = strategy
-        self.scheduler = scheduler
-        self.seed = seed
-        self.ilp_time_limit = ilp_time_limit
-        self.incremental = incremental
-        self.engine = engine
+        self.config = config
+        self.strategy_obj: Strategy = strat
+        self.strategy = strat.name
+        self.isolated = strat.isolated
+        self.scheduler = config.scheduler
+        self.seed = config.seed
+        self.ilp_time_limit = config.ilp_time_limit
+        self.incremental = config.incremental
+        self.engine = config.engine
         self.state = FabricState(spec)
-        self.routing = self._make_routing()
+        self.routing = strat.make_routing(spec, self.seed)
         self.running: Dict[int, object] = {}
         self.queue: List[Job] = []
         self.frag_reason: Dict[int, str] = {}   # job_id -> first blocking cause
@@ -230,64 +311,60 @@ class ClusterSimulator:
         self._order_counter = 0
         # failed-placement memoisation: a placement attempt is a pure
         # function of FabricState, so a job that failed at state version V
-        # fails again until a commit/release bumps the version.  The one
-        # exception is vclos, whose stage-2 fallback is a wall-clock
-        # -limited MILP — a timeout failure is not reproducible, so caching
-        # it could diverge from the retry-every-event v1 engine
+        # fails again until a commit/release bumps the version.  Strategies
+        # whose placement can fail irreproducibly (vclos's wall-clock
+        # -limited MILP fallback) opt out via Strategy.memoize_failures
         self._state_version = 0
         self._fail_version: Dict[int, int] = {}
-        self._memoize_failures = strategy != "vclos"
+        self._memoize_failures = strat.memoize_failures
 
-    # -- strategy plumbing ---------------------------------------------------
-    def _make_routing(self) -> Routing:
-        if self.strategy == "best":
-            return IdealRouting(self.spec)
-        if self.strategy == "ecmp":
-            return ECMPRouting(self.spec, seed=self.seed)
-        if self.strategy == "balanced":
-            return BalancedECMPRouting(self.spec, seed=self.seed)
-        # sr / vclos / ocs-vclos / ocs-relax all route statically
-        return SourceRouting(self.spec)
-
-    def _isolated(self) -> bool:
-        return self.strategy in ("best", "vclos", "ocs-vclos")
-
+    # -- strategy plumbing: one registry dispatch, no per-strategy branches --
     def _place(self, job: Job):
-        jid, n = job.job_id, job.num_gpus
         # O(1) fast-fail: fewer free GPUs than requested can only ever yield
-        # PlacementFailure("gpu") (every stage needs n GPUs, and idle whole
-        # servers are then always < ceil(n/gps)), so skip the fabric scans
-        if self.state.num_free_gpus() < n:
+        # PlacementFailure("gpu") (every strategy needs num_gpus GPUs), so
+        # skip the fabric scans — Strategy.place documents this guarantee
+        if self.state.num_free_gpus() < job.num_gpus:
             return PlacementFailure("gpu")
-        if self.strategy == "vclos":
-            return vclos_place(self.state, jid, n,
-                               ilp_time_limit=self.ilp_time_limit)
-        if self.strategy == "ocs-vclos":
-            return ocs_vclos_place(self.state, jid, n)
-        if self.strategy == "ocs-relax":
-            return self._place_relaxed(jid, n)
-        # best / sr / ecmp / balanced: locality-packed, no reservation
-        if n <= self.spec.gpus_per_server:
-            p = _stage0_server(self.state, jid, n)
-            return p if p else PlacementFailure("gpu")
-        p = _stage1_leaf(self.state, jid, n)
-        if p is not None:
-            return p
-        servers = _collect_servers(self.state,
-                                   math.ceil(n / self.spec.gpus_per_server))
-        if servers is None:
-            return PlacementFailure("gpu")
-        gpus = [g for sv in servers for g in self.spec.gpus_of_server(sv)][:n]
-        return Placement(jid, gpus, "multi-leaf")
+        return self.strategy_obj.place(self, job.job_id, job.num_gpus,
+                                       job=job)
 
-    def _place_relaxed(self, jid: int, n: int):
-        """Locality relaxed: grab any free GPUs, scattered (Table 5)."""
-        free = [g for g in range(self.spec.num_gpus) if self.state.gpu_free(g)]
-        if len(free) < n:
-            return PlacementFailure("gpu")
-        rng = np.random.default_rng(self.seed + jid)
-        gpus = sorted(rng.choice(len(free), size=n, replace=False).tolist())
-        return Placement(jid, [free[i] for i in gpus], "relaxed")
+    # -- placement-context traffic views (see repro.core.strategies) ---------
+    def dense_link_load(self) -> np.ndarray:
+        """Current running flow count per link, indexed by
+        :class:`repro.core.routing.LinkSpace` dense ids.  Read-only
+        (the array is marked non-writeable — a plugin mutating it would
+        silently corrupt v2 rate accounting): contention-aware placements
+        score candidates against it.  Both engines maintain the same
+        integer counts (the v2 engine's flat vector is the ground truth;
+        the v1 engine densifies its Counter), so placements decided from
+        this view are engine-independent."""
+        if self.engine == "v2":
+            view = self._load.view()
+        else:
+            view = np.zeros(self._ls.nlinks, dtype=np.int64)
+            id_of = self._ls.id_of
+            for l, c in self._link_load.items():
+                view[id_of(l)] = c
+        view.setflags(write=False)
+        return view
+
+    def leaf_link_load(self) -> np.ndarray:
+        """Per-leaf fabric traffic: :meth:`dense_link_load` summed over each
+        leaf's uplinks and downlinks (one int64 per leaf).  The v1 path
+        folds its sparse Counter directly (placement attempts are the v1
+        hot path — no O(nlinks) densification); integer sums are order
+        -independent, so both paths are exactly equal."""
+        s = self.spec
+        if self.engine == "v2":
+            load, ls = self._load, self._ls
+            up = load[:ls.half].reshape(s.num_leafs, -1).sum(axis=1)
+            down = load[ls.half:].reshape(s.num_spines, s.num_leafs,
+                                          ls.channels).sum(axis=(0, 2))
+            return up + down
+        out = np.zeros(s.num_leafs, dtype=np.int64)
+        for (kind, a, b, _ch), c in self._link_load.items():
+            out[a if kind == "up" else b] += c
+        return out
 
     # =======================================================================
     # v1 engine: Counter-backed flow/rate machinery + scan event loop
@@ -310,7 +387,7 @@ class ClusterSimulator:
                 maps[leaf] = merged
             routing = SourceRouting(spec, maps=maps)
         route_cache: Dict[Tuple[int, int], list] = {}
-        isolated = self._isolated()
+        isolated = self.isolated
 
         def phase_counts(phase) -> Counter:
             if isolated or intra:
@@ -441,7 +518,7 @@ class ClusterSimulator:
         dirty link; a job whose links all kept their load cannot change rate,
         so skipping it is exact, not approximate.
         """
-        if self._isolated():
+        if self.isolated:
             # reservations guarantee share = 1 (the _RunningJob default)
             self._dirty_links.clear()
             self._dirty_jobs.clear()
@@ -536,7 +613,7 @@ class ClusterSimulator:
         gps = spec.gpus_per_server
         intra = min(gpus) // gps == max(gpus) // gps
         rj = _RunJobV2(job, placement, intra)
-        isolated = self._isolated()
+        isolated = self.isolated
         n = len(gpus)
         mat: Optional[np.ndarray] = None
         metas, asrc, adst, aidx = job.ar_phase_arrays(gpus)
@@ -677,7 +754,7 @@ class ClusterSimulator:
         return rj
 
     def _recompute_rates_v2(self) -> None:
-        if self._isolated():
+        if self.isolated:
             return
         if not self._dirty_cols:
             return
@@ -812,17 +889,36 @@ class ClusterSimulator:
         return rep
 
 
-def simulate(spec: ClusterSpec, jobs: Sequence[Job], strategy: str,
-             scheduler: str = "fifo", seed: int = 0,
-             ilp_time_limit: float = 2.0,
-             incremental: bool = True, engine: str = "v2") -> MetricsReport:
-    sim = ClusterSimulator(spec, strategy=strategy, scheduler=scheduler,
-                           seed=seed, ilp_time_limit=ilp_time_limit,
-                           incremental=incremental, engine=engine)
+def simulate(spec: ClusterSpec, jobs: Sequence[Job], strategy=None,
+             scheduler: Optional[str] = None, seed: Optional[int] = None,
+             ilp_time_limit: Optional[float] = None,
+             incremental: Optional[bool] = None,
+             engine: Optional[str] = None,
+             config: Optional[SimConfig] = None) -> MetricsReport:
+    """Run one trace under one strategy and return its metrics.
+
+    Two equivalent call styles (bit-identical schedules):
+
+      * legacy kwargs — ``simulate(spec, jobs, "ecmp", scheduler="ff")``
+      * unified config — ``simulate(spec, jobs, config=SimConfig(...))``
+
+    Any loose kwarg explicitly passed alongside ``config`` overrides that
+    config field (``simulate(spec, jobs, "sr", config=base)`` sweeps one
+    base config across strategies); omitted kwargs keep the config's
+    values.
+    """
+    if config is None and strategy is None:
+        raise ValueError("simulate() needs a strategy name/instance "
+                         "or a SimConfig")
+    config = (config or SimConfig()).with_overrides(
+        strategy=strategy, scheduler=scheduler, seed=seed,
+        ilp_time_limit=ilp_time_limit, incremental=incremental,
+        engine=engine)
+    sim = ClusterSimulator(spec, config=config)
     # copy jobs so runs under different strategies don't contaminate each other
     import copy
     jobs2 = [copy.copy(j) for j in jobs]
     for j in jobs2:
         j.start_time = None
         j.finish_time = None
-    return sim.run(jobs2)
+    return sim.run(jobs2, max_time=config.max_time)

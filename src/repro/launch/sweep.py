@@ -19,6 +19,12 @@ to a JSON report.
       --loads 200,120 --seeds 0,1,2 --jobs 500 --out campaign.json
   PYTHONPATH=src python -m repro.launch.sweep campaign --trace jobs.csv \\
       --strategies ecmp,vclos
+  PYTHONPATH=src python -m repro.launch.sweep campaign --list-strategies
+
+Strategies resolve against the plugin registry
+(``repro.core.strategies``) — ``--list-strategies`` prints every
+registered plugin, including ones registered at runtime, and unknown
+names error out enumerating them.
 """
 
 from __future__ import annotations
@@ -89,8 +95,10 @@ def _csv(kind):
 
 def campaign_main(argv) -> None:
     from repro.core import (CLUSTER512, CLUSTER512_OCS, CLUSTER2048,
-                            CLUSTER2048_OCS, TESTBED32, CampaignGrid,
-                            WorkloadSpec, load_trace_csv, run_campaign)
+                            CLUSTER2048_OCS, ENGINES, TESTBED32,
+                            CampaignGrid, SimConfig, WorkloadSpec,
+                            load_trace_csv, registered_strategies,
+                            run_campaign)
 
     clusters = {"512": (CLUSTER512, CLUSTER512_OCS),
                 "2048": (CLUSTER2048, CLUSTER2048_OCS),
@@ -98,6 +106,9 @@ def campaign_main(argv) -> None:
     ap = argparse.ArgumentParser(
         prog="sweep campaign",
         description="strategy × policy × load × seed simulation campaign")
+    ap.add_argument("--list-strategies", action="store_true",
+                    help="print the registered strategy plugins "
+                         "(name + description) and exit")
     ap.add_argument("--cluster", default="512", choices=sorted(clusters))
     ap.add_argument("--strategies", type=_csv(str),
                     default=("best", "vclos", "sr", "ecmp"))
@@ -121,7 +132,7 @@ def campaign_main(argv) -> None:
                          "synthetic workload (see repro.core.workloads)")
     ap.add_argument("--full-recompute", action="store_true",
                     help="use the full-recompute rate engine (debug)")
-    ap.add_argument("--engine", default="v2", choices=("v1", "v2"),
+    ap.add_argument("--engine", default="v2", choices=ENGINES,
                     help="simulator engine: v2 heap engine (default) or the "
                          "v1 scan engine — bit-identical schedules")
     ap.add_argument("--workers", type=int, default=None,
@@ -133,6 +144,10 @@ def campaign_main(argv) -> None:
     ap.add_argument("--ilp-time-limit", type=float, default=2.0)
     ap.add_argument("--out", default=None, help="write the JSON report here")
     args = ap.parse_args(argv)
+    if args.list_strategies:
+        for name, strat in registered_strategies().items():
+            print(f"{name:22s} {strat.description}")
+        return
     if args.deadline_slack is not None and len(args.deadline_slack) != 2:
         ap.error("--deadline-slack takes exactly two values: LO,HI "
                  f"(got {','.join(map(str, args.deadline_slack))})")
@@ -157,12 +172,13 @@ def campaign_main(argv) -> None:
         max_gpus=spec.num_gpus if args.max_gpus is None else args.max_gpus,
         deadline_slack=tuple(args.deadline_slack) if args.deadline_slack
         else None)
+    config = SimConfig(engine=args.engine,
+                       incremental=not args.full_recompute,
+                       workers=args.workers,
+                       store="stream" if args.stream else "full",
+                       ilp_time_limit=args.ilp_time_limit)
     result = run_campaign(spec, grid, workload=workload, trace=trace,
-                          incremental=not args.full_recompute,
-                          engine=args.engine, workers=args.workers,
-                          store="stream" if args.stream else "full",
-                          ilp_time_limit=args.ilp_time_limit,
-                          ocs_spec=ocs_spec,
+                          ocs_spec=ocs_spec, config=config,
                           progress=lambda m: print(m, flush=True))
     cols = ("strategy", "scheduler", "load", "n_finished", "jct_mean",
             "jct_p99", "queue_delay_mean", "makespan_mean",

@@ -17,7 +17,8 @@ from repro.core.jobs import Job
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("engine", ["v1", "v2"])
-@pytest.mark.parametrize("strategy", ["ecmp", "sr", "balanced", "ocs-relax"])
+@pytest.mark.parametrize("strategy", ["ecmp", "sr", "balanced", "ocs-relax",
+                                      "contention-affinity"])
 def test_incremental_rates_match_full_recompute(strategy, engine):
     """Arrival/completion events re-solve only jobs sharing a contended
     link; the schedule must be bit-identical to recomputing everything."""
@@ -38,7 +39,7 @@ def test_incremental_rates_match_full_recompute(strategy, engine):
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("strategy", ["ecmp", "sr", "balanced", "vclos",
-                                      "ocs-relax"])
+                                      "ocs-relax", "contention-affinity"])
 def test_v2_engine_matches_v1(strategy):
     """The lazy-deletion heap engine must replay the scan engine's schedule
     bit-for-bit: same completions, same JCT/JWT floats, same slowdowns."""
@@ -65,15 +66,18 @@ def test_v2_engine_matches_v1_ocs_vclos():
     assert v1.jwts == v2.jwts
 
 
+@pytest.mark.parametrize("strategy", ["ecmp", "contention-affinity"])
 @pytest.mark.parametrize("scheduler", ["ff", "edf"])
-def test_v2_engine_matches_v1_queueing_policies(scheduler):
+def test_v2_engine_matches_v1_queueing_policies(scheduler, strategy):
     """Placement memoisation must not change which queued job places when
     the scheduler reorders the queue (ff/edf retry every waiting job)."""
     jobs = generate_trace(WorkloadSpec(num_jobs=70, mean_interarrival=80.0,
                                        seed=3, max_gpus=128,
                                        deadline_slack=(1.5, 4.0)))
-    v1 = simulate(CLUSTER512, jobs, "ecmp", scheduler=scheduler, engine="v1")
-    v2 = simulate(CLUSTER512, jobs, "ecmp", scheduler=scheduler, engine="v2")
+    v1 = simulate(CLUSTER512, jobs, strategy, scheduler=scheduler,
+                  engine="v1")
+    v2 = simulate(CLUSTER512, jobs, strategy, scheduler=scheduler,
+                  engine="v2")
     assert v1.jcts == v2.jcts
     assert v1.jwts == v2.jwts
 
