@@ -2,10 +2,13 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test bench-smoke bench bench-gate docs-lint check
+.PHONY: test test-fast bench-smoke bench bench-gate docs-lint check
 
-test:            ## tier-1 verification (what CI gates on)
+test:            ## tier-1 verification (what CI gates on) — the full suite
 	$(PY) -m pytest -x -q
+
+test-fast:       ## tier-1 minus @pytest.mark.slow parity sweeps (~fast inner loop)
+	$(PY) -m pytest -x -q -m "not slow"
 
 bench-smoke:     ## ~60s campaign smoke: v2-vs-v1 speedup, JCT identity, parallel path
 	$(PY) -m benchmarks.bench_campaign
@@ -23,4 +26,4 @@ bench:           ## every paper table/figure benchmark
 docs-lint:       ## README/docs stay honest against the code
 	$(PY) scripts/docs_lint.py
 
-check: docs-lint bench-gate test   ## lint + perf gate + tests
+check: docs-lint bench-gate test-fast   ## lint + perf gate + fast tests (full tier-1: make test)

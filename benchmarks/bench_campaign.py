@@ -22,10 +22,12 @@
 
 from __future__ import annotations
 
+import dataclasses
 import time
 
-from repro.core import (CLUSTER512, CampaignGrid, WorkloadSpec,
-                        generate_trace, run_campaign, simulate)
+from repro.core import (CLUSTER512, CampaignGrid, SimConfig, WorkloadSpec,
+                        generate_events, generate_trace, run_campaign,
+                        simulate)
 
 from .common import timed
 
@@ -113,6 +115,46 @@ def run(fast: bool = True):
                     # ~4-5x at bench_scale's 10k-job size)
                     "meets_5x_vs_seed_baseline":
                         bool(geomean(vs_seed) >= 5.0)},
+    })
+
+    # -- (2b) churn trace: dynamic events + defrag through both engines ----
+    # measured alongside but excluded from the gated 5x geomean (like
+    # contention-affinity) — the event path has no seed-baseline to compare
+    # against; its identical_jct flag IS gate-enforced
+    churn_wl = dataclasses.replace(workload, preempt_fraction=0.15,
+                                   resize_fraction=0.08,
+                                   server_mtbf=6000.0, link_mtbf=8000.0,
+                                   fail_duration=2400.0)
+    churn_trace = generate_trace(churn_wl)
+    churn_events = tuple(generate_events(churn_wl, churn_trace, CLUSTER512))
+    cfg = SimConfig(strategy="ecmp", events=churn_events,
+                    defrag_interval=10000.0)
+    r_v1, t_v2_best, rep = [], float("inf"), {}
+    for _ in range(repeats):
+        t0 = time.time()
+        rep["v2"] = simulate(CLUSTER512, churn_trace, config=cfg,
+                             engine="v2")
+        t_v2 = time.time() - t0
+        t0 = time.time()
+        rep["v1"] = simulate(CLUSTER512, churn_trace, config=cfg,
+                             engine="v1")
+        r_v1.append((time.time() - t0) / t_v2)
+        t_v2_best = min(t_v2_best, t_v2)
+    r_v1.sort()
+    rows.append({
+        "name": "campaign_churn[ecmp]",
+        "us_per_call": round(t_v2_best * 1e6, 1),
+        "derived": {"engine": "v2", "jobs": n_jobs, "gpus": 512,
+                    "events": len(churn_events),
+                    "preemptions": rep["v2"].preemptions,
+                    "failures": rep["v2"].failures,
+                    "resizes": rep["v2"].resizes,
+                    "speedup_vs_v1": round(r_v1[len(r_v1) // 2], 2),
+                    "identical_jct":
+                        bool(rep["v2"].jcts == rep["v1"].jcts
+                             and rep["v2"].event_log == rep["v1"].event_log
+                             and rep["v2"].n_finished
+                             == rep["v1"].n_finished)},
     })
 
     # -- (3) parallel campaign path: 2 workers ≡ serial ---------------------

@@ -34,8 +34,8 @@ MODULES = [
 ]
 
 #: rows whose ``derived`` payload is copied into the JSON summary
-SUMMARY_PREFIXES = ("campaign_engine", "scale_engine", "scale_campaign_cell",
-                    "campaign_parallel")
+SUMMARY_PREFIXES = ("campaign_engine", "campaign_churn", "scale_engine",
+                    "scale_campaign_cell", "campaign_parallel")
 
 
 def write_json(path: str, rows, failures: int, full: bool) -> None:

@@ -19,7 +19,7 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 DOCS = ["README.md", "docs/architecture.md", "docs/simulator.md",
-        "docs/strategies.md"]
+        "docs/strategies.md", "docs/events.md"]
 
 errors: list[str] = []
 

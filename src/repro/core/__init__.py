@@ -9,6 +9,7 @@ Layers:
   ocs        — OCS-vClos stages + rewiring planner (Algorithm 2/4)
   strategies — pluggable Strategy registry (builtins + contention-affinity)
   config     — SimConfig: unified simulate()/campaign configuration
+  events     — dynamic cluster events (preempt/fail/resize) + frag index
   fairshare  — max-min fair water-filling (numpy + JAX)
   jobs       — DML workload profiles + dataset generators
   workloads  — reproducible Poisson/CSV arrival traces for campaigns
@@ -38,8 +39,10 @@ from .fairshare import maxmin_fair, maxmin_fair_jax, maxmin_fair_numpy
 from .jobs import (BATCHES, PROFILES, Job, ModelProfile, cluster_dataset,
                    testbed_dataset, weighted_choice, HELIOS_SIZE_MIX,
                    TPUV4_SIZE_MIX)
-from .workloads import (SIZE_MIXES, WorkloadSpec, generate_trace, load_trace_csv,
-                        poisson_trace, save_trace_csv, trace_stats)
+from .events import (EVENT_KINDS, ClusterEvent, frag_index, validate_events)
+from .workloads import (SIZE_MIXES, WorkloadSpec, generate_events,
+                        generate_trace, load_trace_csv, poisson_trace,
+                        save_trace_csv, trace_stats)
 from .metrics import MetricsReport, cdf, job_metrics
 from .strategies import (Strategy, get_strategy, register_strategy,
                          registered_strategies, strategy_names,

@@ -36,7 +36,8 @@ from .simulator import simulate
 from .scheduler import QUEUE_POLICIES
 from .strategies import get_strategy
 from .topology import ClusterSpec
-from .workloads import WorkloadSpec, generate_trace, trace_stats
+from .workloads import (WorkloadSpec, generate_events, generate_trace,
+                        trace_stats)
 
 
 @dataclass(frozen=True)
@@ -146,6 +147,7 @@ class CampaignResult:
                 jct_mean = float(jcts.mean())
                 jwt_mean = float(jwts.mean())
                 slow_mean = float(np.mean(slow)) if slow else 1.0
+            frag_vals = [f for c in cells for _, f in c.report.frag_series]
             rows.append({
                 "strategy": strat, "scheduler": sched, "load": load,
                 "seeds": len(cells),
@@ -159,6 +161,17 @@ class CampaignResult:
                 "contention_ratio_mean": slow_mean,
                 "frag_gpu": sum(c.report.frag_gpu for c in cells),
                 "frag_network": sum(c.report.frag_network for c in cells),
+                # dynamic-events columns (all 0 for churn-free campaigns)
+                "preemptions": sum(c.report.preemptions for c in cells),
+                "failures": sum(c.report.failures for c in cells),
+                "resizes": sum(c.report.resizes for c in cells),
+                "migrations": sum(c.report.migrations for c in cells),
+                "migration_bytes": float(sum(c.report.migration_bytes
+                                             for c in cells)),
+                "goodput_mean": float(np.mean([c.report.goodput
+                                               for c in cells])),
+                "frag_index_mean": (float(np.mean(frag_vals))
+                                    if frag_vals else 0.0),
                 "sim_seconds": float(sum(c.wall_time for c in cells)),
             })
         return rows
@@ -300,6 +313,7 @@ def run_campaign(spec: ClusterSpec, grid: CampaignGrid,
     result = CampaignResult(spec=spec, grid=grid)
     t0 = time.time()
     traces: Dict[Tuple[float, int], List[Job]] = {}
+    events: Dict[Tuple[float, int], tuple] = {}
     cells: List[Tuple[str, str, float, int, ClusterSpec, List[Job],
                       SimConfig]] = []
     for strat, sched, load, seed in grid.cells():
@@ -309,13 +323,23 @@ def run_campaign(spec: ClusterSpec, grid: CampaignGrid,
                             generate_trace(workload.with_load(load).with_seed(seed)))
             result.trace_info[f"load={load:g},seed={seed}"] = \
                 trace_stats(traces[tkey])
+            # churn events regenerate per (load, seed) exactly like the
+            # trace, so every strategy/scheduler cell of a slice replays
+            # the identical event sequence (paired churn ablations); a
+            # caller-supplied config.events list is shared by every cell
+            # and concatenated in front (the simulator time-sorts)
+            cell_events = (generate_events(
+                workload.with_load(load).with_seed(seed), traces[tkey],
+                spec) if workload.has_churn and trace is None else [])
+            events[tkey] = tuple(config.events) + tuple(cell_events)
         cell_spec = ocs_spec if (ocs_spec is not None and
                                  get_strategy(strat).wants_ocs_spec) else spec
         # resolve the per-cell config here in the parent: the grid's name
         # replaces whatever config.strategy held (possibly an unpicklable
         # Strategy instance), so workers always receive plain scalars
         cell_cfg = dataclasses.replace(config, strategy=strat,
-                                       scheduler=sched, seed=seed)
+                                       scheduler=sched, seed=seed,
+                                       events=events[tkey])
         cells.append((strat, sched, load, seed, cell_spec, traces[tkey],
                       cell_cfg))
 

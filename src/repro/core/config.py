@@ -17,8 +17,9 @@ from __future__ import annotations
 import dataclasses
 import math
 from dataclasses import dataclass
-from typing import Optional, Union
+from typing import Optional, Tuple, Union
 
+from .events import ClusterEvent
 from .scheduler import QUEUE_POLICIES
 from .strategies import Strategy, get_strategy
 
@@ -47,6 +48,14 @@ class SimConfig:
     incremental: bool = True
     engine: str = "v2"
     max_time: float = math.inf
+    # dynamic-events knobs (repro.core.events): the event trace applied to
+    # this run, the migration-defrag tick period (0 = off; ticks sample the
+    # fragmentation index for every strategy, migrations only happen for
+    # strategies with Strategy.supports_migration), and the checkpoint
+    # -restart cost of one migration in iterations
+    events: Tuple[ClusterEvent, ...] = ()
+    defrag_interval: float = 0.0
+    migration_iters: float = 25.0
     # campaign-only knobs
     workers: Optional[int] = None
     store: str = "full"
@@ -62,6 +71,14 @@ class SimConfig:
         if self.store not in STORES:
             raise ValueError(f"unknown store mode {self.store!r}; "
                              f"choose 'full' or 'stream'")
+        for ev in self.events:
+            if not isinstance(ev, ClusterEvent):
+                raise TypeError(f"SimConfig.events needs ClusterEvent "
+                                f"entries, got {ev!r}")
+        if self.defrag_interval < 0:
+            raise ValueError("defrag_interval must be >= 0 (0 disables)")
+        if self.migration_iters < 0:
+            raise ValueError("migration_iters must be >= 0")
 
     def resolve_strategy(self) -> Strategy:
         """The registry instance behind :attr:`strategy`."""

@@ -76,6 +76,11 @@ class Job:
     # filled during simulation
     start_time: Optional[float] = None
     finish_time: Optional[float] = None
+    # carried across preemption / failure / resize restarts: the settled
+    # remaining work (iterations) plus any checkpoint-restart penalty;
+    # None means the job has never been interrupted (fresh placements run
+    # the full num_iters — the pre-events behaviour, bit-for-bit)
+    remaining_iters: Optional[float] = None
 
     @property
     def profile(self) -> ModelProfile:

@@ -29,12 +29,29 @@ class MetricsReport:
     frag_network: int = 0       # jobs blocked by network fragmentation
     p99_jct: float = 0.0
     makespan: float = 0.0       # last finish − first arrival over finished jobs
+    # dynamic-events accounting (repro.core.events): churn applied to the
+    # run and the work it displaced.  goodput is useful (first-attempt)
+    # GPU-seconds delivered per makespan second — under churn it falls
+    # while avg_jct alone can hide the redone work.
+    preemptions: int = 0        # running jobs stopped by `preempt` events
+    failures: int = 0           # running jobs killed by server/link failures
+    resizes: int = 0            # elastic resize events applied
+    migrations: int = 0         # jobs moved by the defragmentation pass
+    migration_bytes: float = 0.0  # checkpoint bytes moved by migrations
+    goodput: float = 0.0
     # per-job samples (finished jobs only), for CDFs / cross-seed pooling
     jcts: List[float] = field(default_factory=list, repr=False)
     jwts: List[float] = field(default_factory=list, repr=False)
     # contention ratio: actual JRT / contention-free JRT (1.0 = isolated);
     # filled by the simulator, empty when the producer doesn't track rates
     slowdowns: List[float] = field(default_factory=list, repr=False)
+    # fragmentation index over time: [t, frag_index(state)] sampled at every
+    # dynamic event and defrag tick (empty when the run had neither)
+    frag_series: List[List[float]] = field(default_factory=list, repr=False)
+    # applied-event log (t, kind, a, b, n_affected) — the deterministic
+    # -replay fingerprint: bit-identical across engines, worker counts and
+    # store modes for a fixed SimConfig.seed
+    event_log: List[tuple] = field(default_factory=list, repr=False)
     # streaming-aggregation state (see condense()): when True, the per-job
     # arrays hold ≤ max_samples evenly-spaced order statistics and the exact
     # first moments live in the scalars below
@@ -70,6 +87,14 @@ class MetricsReport:
         self.jcts = thin(self.jcts)
         self.jwts = thin(self.jwts)
         self.slowdowns = thin(self.slowdowns)
+        if len(self.frag_series) > max_samples:
+            # a time series, not order statistics: keep evenly-spaced rows
+            # in time order (first/last retained)
+            idx = np.unique(np.linspace(0, len(self.frag_series) - 1,
+                                        max_samples).astype(int))
+            self.frag_series = [self.frag_series[i] for i in idx]
+        # event_log stays exact: it is the deterministic-replay fingerprint
+        # and is already bounded by the (small) event count
         self.condensed = True
         return self
 
@@ -79,6 +104,10 @@ class MetricsReport:
             "avg_jct": self.avg_jct, "stability": self.stability,
             "p99_jwt": self.p99_jwt, "n": self.n_finished,
             "frag_gpu": self.frag_gpu, "frag_network": self.frag_network,
+            "preemptions": self.preemptions, "failures": self.failures,
+            "resizes": self.resizes, "migrations": self.migrations,
+            "migration_bytes": self.migration_bytes,
+            "goodput": self.goodput,
         }
 
 
@@ -93,14 +122,20 @@ def job_metrics(jobs: Sequence[Job]) -> MetricsReport:
     for j, c in zip(done, jct):
         groups[(j.model, j.num_gpus, j.batch_size)].append(float(c))
     stds = [float(np.std(v)) for v in groups.values() if len(v) >= 2]
+    makespan = float(max(j.finish_time for j in done)
+                     - min(j.arrival for j in done))
+    # useful GPU-seconds per wall second: each finished job contributes its
+    # contention-free runtime (num_iters × ideal iteration) once — work
+    # redone after preemptions/failures inflates JCT but never goodput
+    useful = sum(j.ideal_runtime() * j.num_gpus for j in done)
     return MetricsReport(
         avg_jrt=float(jrt.mean()), avg_jwt=float(jwt.mean()),
         avg_jct=float(jct.mean()),
         stability=float(np.mean(stds)) if stds else 0.0,
         p99_jwt=float(np.percentile(jwt, 99)), n_finished=len(done),
         p99_jct=float(np.percentile(jct, 99)),
-        makespan=float(max(j.finish_time for j in done)
-                       - min(j.arrival for j in done)),
+        makespan=makespan,
+        goodput=float(useful / makespan) if makespan > 0 else 0.0,
         jcts=[float(c) for c in jct], jwts=[float(w) for w in jwt])
 
 

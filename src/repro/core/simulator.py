@@ -28,6 +28,15 @@ invariant that lets v2 cache each completion in a heap entry.  v1 and v2
 therefore produce bit-identical schedules (asserted per-strategy by
 ``tests/test_campaign.py`` and ``benchmarks/bench_campaign.py``).
 
+**Dynamic cluster events** (:mod:`repro.core.events`, docs/events.md) ride
+the same loops: job preemption with checkpoint-restart cost, server/link
+failure + recovery, elastic GPU resize (``SimConfig.events``), and a
+periodic migration-defragmentation pass (``SimConfig.defrag_interval``;
+strategies opt in via ``Strategy.supports_migration``).  Every handler is
+engine-agnostic — it mutates engine state only through a per-run dispatch
+tuple — so the bit-parity contract extends to arbitrary churn
+(``tests/test_events.py``, hypothesis suite in ``tests/test_properties.py``).
+
 Strategies are **plugins**: every per-strategy decision (routing factory,
 placement, isolation, failure memoisation, queue-policy compatibility)
 lives on a :class:`repro.core.strategies.Strategy` registered in
@@ -62,6 +71,8 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from .config import ENGINES, SimConfig
+from .events import (FAIL_GPU_OWNER, FAIL_LINK_OWNER, ClusterEvent,
+                     frag_index, validate_events)
 from .fairshare import phase_worst_loads
 from .jobs import GBPS, Job
 from .metrics import MetricsReport, job_metrics
@@ -176,7 +187,9 @@ class _RunJobV2:
     def __init__(self, job: Job, placement: Placement, intra: bool):
         self.job = job
         self.placement = placement
-        self.iters_left = float(job.num_iters)
+        self.iters_left = (float(job.num_iters)
+                           if job.remaining_iters is None
+                           else job.remaining_iters)
         self.iter_ideal = 1.0
         self.rate = 1.0
         self.last_update = 0.0
@@ -317,6 +330,29 @@ class ClusterSimulator:
         self._state_version = 0
         self._fail_version: Dict[int, int] = {}
         self._memoize_failures = strat.memoize_failures
+        # v2 per-job version continuity across restarts (see _add_running_v2)
+        self._ver_base: Dict[int, int] = {}
+        # dynamic-events machinery (repro.core.events): the applied-event
+        # log / fragmentation time series that end up on the MetricsReport,
+        # resource fences held by the failure sentinels, and the defrag
+        # clock.  Every member is engine-agnostic — the handlers run the
+        # same code under v1 and v2, dispatching through _ops.
+        self._events: List[ClusterEvent] = validate_events(config.events,
+                                                           spec)
+        self._jobs_by_id: Dict[int, Job] = {}
+        self._down_servers: Dict[int, List[int]] = {}   # server -> fenced GPUs
+        self._down_links: Dict[Tuple[int, int], int] = {}  # (leaf,spine) -> ch
+        self._defrag_interval = config.defrag_interval
+        self._next_defrag = (config.defrag_interval
+                             if config.defrag_interval > 0 else math.inf)
+        self.event_log: List[tuple] = []
+        self.frag_series: List[List[float]] = []
+        self.n_preemptions = 0
+        self.n_failures = 0
+        self.n_resizes = 0
+        self.n_migrations = 0
+        self.migration_bytes = 0.0
+        self._ops: Optional[tuple] = None   # set per run(): engine dispatch
 
     # -- strategy plumbing: one registry dispatch, no per-strategy branches --
     def _place(self, job: Job):
@@ -375,7 +411,9 @@ class ClusterSimulator:
         gpus = placement.gpus[:job.num_gpus]
         intra = len({spec.server_of_gpu(g) for g in gpus}) == 1
         rj = _RunningJob(job=job, placement=placement,
-                         iters_left=float(job.num_iters),
+                         iters_left=(float(job.num_iters)
+                                     if job.remaining_iters is None
+                                     else job.remaining_iters),
                          iter_ideal=1.0, intra_server=intra)
         routing = self.routing
         if placement.routing_maps and isinstance(routing, SourceRouting):
@@ -558,30 +596,51 @@ class ClusterSimulator:
                     break  # strict head-of-line blocking
                 continue
             commit(self.state, res)
-            job.start_time = self.now
-            self._add_running(job, res)
+            if job.start_time is None:     # keep the FIRST start: JWT is
+                job.start_time = self.now  # time-to-first-placement even
+            self._add_running(job, res)    # across restart re-queues
             self.queue.remove(job)
             changed = True
         return changed
 
     def _run_v1(self, arrivals: List[Job], max_time: float) -> None:
         ai = 0
+        ei = 0
+        events = self._events
         while (ai < len(arrivals) or self.queue or self.running) \
                 and self.now < max_time:
             next_arrival = arrivals[ai].arrival if ai < len(arrivals) else math.inf
+            next_event = events[ei].time if ei < len(events) else math.inf
+            # a defrag tick can only make progress while something runs or
+            # further events/arrivals are pending; otherwise it must not
+            # keep the clock alive (a permanently unplaceable queued job
+            # would spin ticks forever instead of ending the run)
+            next_defrag = (self._next_defrag
+                           if (self.running or ei < len(events)
+                               or ai < len(arrivals)) else math.inf)
             next_finish, fin_id = math.inf, None
             for jid, rj in self.running.items():
                 if rj.t_fin < next_finish:
                     next_finish, fin_id = rj.t_fin, jid
-            t_next = min(next_arrival, next_finish)
-            if t_next is math.inf:
+            t_next = min(next_arrival, next_finish, next_event, next_defrag)
+            if math.isinf(t_next):
                 break
             self.now = t_next
-            if next_finish <= next_arrival and fin_id is not None:
+            # tie order (shared with v2): finish, event, defrag, arrival —
+            # completions free resources before same-instant churn/arrivals
+            if fin_id is not None and \
+                    next_finish <= min(next_arrival, next_event, next_defrag):
                 rj = self._remove_running(fin_id)
                 self._finish_job(rj, fin_id)
                 self._try_schedule()
                 self._recompute_rates()
+            elif next_event <= min(next_arrival, next_defrag):
+                ev = events[ei]
+                ei += 1
+                self._handle_event(ev)
+            elif next_defrag <= next_arrival:
+                self._next_defrag += self._defrag_interval
+                self._defrag_pass()
             else:
                 job = arrivals[ai]
                 ai += 1
@@ -599,6 +658,212 @@ class ClusterSimulator:
             ocs_release(self.state, rj.placement)
         else:
             release(self.state, fin_id, rj.placement)
+
+    # =======================================================================
+    # dynamic events — ONE implementation for both engines.  Every handler
+    # mutates engine state only through the _ops dispatch tuple (remove /
+    # add / try-schedule / recompute-rates bound per run()), so the exact
+    # same settle/release/requeue sequence happens under v1 and v2 — the
+    # events extension of the bit-parity contract.
+    # =======================================================================
+
+    def _preempt_running(self, jid: int, penalty: float) -> None:
+        """Checkpoint-stop one running job: settle its work at ``now``,
+        free its resources, and re-queue it carrying the remaining
+        iterations plus the restart penalty (clamped: a job never owes
+        more work than it started with)."""
+        remove = self._ops[0]
+        rj = self.running[jid]
+        _settle(rj, self.now)
+        rj = remove(jid)
+        job = rj.job
+        job.remaining_iters = min(float(job.num_iters),
+                                  max(rj.iters_left, 0.0) + penalty)
+        if rj.placement.xconn_ports:
+            ocs_release(self.state, rj.placement)
+        else:
+            release(self.state, jid, rj.placement)
+        self.queue.append(job)
+
+    def _ev_preempt(self, ev: ClusterEvent):
+        if ev.job_id not in self.running:
+            return False, ev.job_id, 0, 0      # queued/finished: no-op
+        self._preempt_running(ev.job_id, ev.restart_iters)
+        self.n_preemptions += 1
+        return True, ev.job_id, 0, 1
+
+    def _ev_server_fail(self, ev: ClusterEvent):
+        sv = ev.server
+        if sv in self._down_servers:
+            return False, sv, 0, 0             # already down: no-op
+        spec = self.spec
+        gps = spec.gpus_per_server
+        affected = sorted(jid for jid, rj in self.running.items()
+                          if any(g // gps == sv for g in rj.placement.gpus))
+        for jid in affected:
+            self._preempt_running(jid, ev.restart_iters)
+        self.n_failures += len(affected)
+        # fence the (now fully idle) server's GPUs behind the sentinel so
+        # every strategy's placement sees them as occupied
+        gpus = [g for g in spec.gpus_of_server(sv) if self.state.gpu_free(g)]
+        self.state.allocate_gpus(FAIL_GPU_OWNER, gpus)
+        self._down_servers[sv] = gpus
+        return True, sv, 0, len(affected)
+
+    def _ev_server_recover(self, ev: ClusterEvent):
+        gpus = self._down_servers.pop(ev.server, None)
+        if gpus is None:
+            return False, ev.server, 0, 0      # wasn't down: no-op
+        self.state.release_job(FAIL_GPU_OWNER, gpus=gpus)
+        return True, ev.server, 0, 0
+
+    def _link_flow_users(self, n: int, m: int) -> Set[int]:
+        """Running jobs with live flows on any channel of fabric link
+        (leaf n, spine m) — computed from each engine's maintained
+        link→jobs index (identical contents by the parity contract)."""
+        out: Set[int] = set()
+        channels = self._ls.channels
+        if self.engine == "v2":
+            ids = [self._ls.id_of(("up", n, m, c)) for c in range(channels)]
+            ids += [self._ls.id_of(("down", m, n, c))
+                    for c in range(channels)]
+            words = np.bitwise_or.reduce(self._users[np.asarray(ids)], axis=0)
+            bits = np.unpackbits(words.view(np.uint8), bitorder="little")
+            for s in np.flatnonzero(bits):
+                out.add(self._slot_map[s].job.job_id)
+            return out
+        for c in range(channels):
+            out.update(self._link_users.get(("up", n, m, c), ()))
+            out.update(self._link_users.get(("down", m, n, c), ()))
+        return out
+
+    def _ev_link_fail(self, ev: ClusterEvent):
+        n, m = ev.leaf, ev.spine
+        if (n, m) in self._down_links:
+            return False, n, m, 0              # already down: no-op
+        # kill reservation holders (vClos-style) and live-flow users alike
+        affected = {j for j in self.state.link_owner.get((n, m), {})
+                    if j >= 0}
+        affected |= self._link_flow_users(n, m)
+        affected = sorted(affected)
+        for jid in affected:
+            self._preempt_running(jid, ev.restart_iters)
+        self.n_failures += len(affected)
+        # fence whatever channels remain free; reservation-based strategies
+        # now see zero capacity on this link (oblivious routings still may
+        # hash new flows onto it — see docs/events.md on the model)
+        free = self.state.free_channels(n, m)
+        if free > 0:
+            self.state.reserve_links(FAIL_LINK_OWNER, {(n, m): free})
+        self._down_links[(n, m)] = free
+        return True, n, m, len(affected)
+
+    def _ev_link_recover(self, ev: ClusterEvent):
+        cnt = self._down_links.pop((ev.leaf, ev.spine), None)
+        if cnt is None:
+            return False, ev.leaf, ev.spine, 0
+        if cnt > 0:
+            self.state.unreserve_links(FAIL_LINK_OWNER,
+                                       {(ev.leaf, ev.spine): cnt})
+        return True, ev.leaf, ev.spine, 0
+
+    def _ev_resize(self, ev: ClusterEvent):
+        job = self._jobs_by_id.get(ev.job_id)
+        if job is None or job.finish_time is not None:
+            return False, ev.job_id, ev.new_gpus, 0
+        new = max(1, min(ev.new_gpus, self.spec.num_gpus))
+        if new == job.num_gpus:
+            return False, ev.job_id, new, 0
+        if job.job_id in self.running:
+            # checkpoint-restart at the new size: the remaining iterations
+            # carry over (work is size-independent; the per-iteration time
+            # is re-derived from the new placement)
+            self._preempt_running(job.job_id, ev.restart_iters)
+            job.num_gpus = new
+            self.n_resizes += 1
+            return True, ev.job_id, new, 1
+        job.num_gpus = new
+        self.n_resizes += 1
+        # queued: placement prospects changed — retry the queue (a future
+        # arrival changes nothing yet)
+        return job in self.queue, ev.job_id, new, 0
+
+    _EVENT_HANDLERS = {"preempt": _ev_preempt,
+                       "server-fail": _ev_server_fail,
+                       "server-recover": _ev_server_recover,
+                       "link-fail": _ev_link_fail,
+                       "link-recover": _ev_link_recover,
+                       "resize": _ev_resize}
+
+    def _handle_event(self, ev: ClusterEvent) -> None:
+        changed, a, b, n_affected = self._EVENT_HANDLERS[ev.kind](self, ev)
+        self.event_log.append((self.now, ev.kind, a, b, n_affected))
+        self.frag_series.append([self.now, frag_index(self.state)])
+        if changed:
+            # freed/fenced resources invalidate memoised placement failures
+            # and may admit (or block) queued jobs; removed flows dirty
+            # their links, so rates re-solve exactly like a completion
+            self._state_version += 1
+            self._ops[2]()   # try-schedule
+            self._ops[3]()   # recompute rates
+
+    # -- migration defragmentation ------------------------------------------
+
+    @staticmethod
+    def _locality_key(spec: ClusterSpec, gpus: Sequence[int]):
+        leafs = {g // spec.gpus_per_leaf for g in gpus}
+        servers = {g // spec.gpus_per_server for g in gpus}
+        return len(leafs), len(servers)
+
+    def _defrag_pass(self) -> None:
+        """One defrag tick: sample the fragmentation index, then (for
+        strategies with ``supports_migration``) try to checkpoint-migrate
+        each running job to a strictly more local placement — fewer leafs,
+        then fewer servers — reclaiming contiguous leaf capacity the way
+        the paper's fragmentation argument assumes a defragmenter would.
+
+        A trial re-place happens against the fabric with the job's own
+        resources released; if the trial is not strictly better the
+        original placement is restored untouched (zero float churn — the
+        job's rate trajectory is exactly as if the trial never happened).
+        """
+        self.frag_series.append([self.now, frag_index(self.state)])
+        moved = 0
+        if self.strategy_obj.supports_migration and self.running:
+            spec = self.spec
+            remove, add = self._ops[0], self._ops[1]
+            for jid in sorted(self.running):
+                rj = self.running[jid]
+                p = rj.placement
+                if p.xconn_ports:
+                    continue    # OCS cross-connects are not re-placeable
+                key = self._locality_key(spec, p.gpus)
+                n = rj.job.num_gpus
+                best_servers = -(-n // spec.gpus_per_server)  # ceil
+                if key[0] == 1 and key[1] <= best_servers:
+                    continue    # already maximally local
+                release(self.state, jid, p)
+                res = self._place(rj.job)
+                if isinstance(res, PlacementFailure) or \
+                        self._locality_key(spec, res.gpus) >= key:
+                    commit(self.state, p)   # restore; rj never touched
+                    continue
+                rj = remove(jid)
+                _settle(rj, self.now)
+                job = rj.job
+                job.remaining_iters = min(
+                    float(job.num_iters),
+                    max(rj.iters_left, 0.0) + self.config.migration_iters)
+                commit(self.state, res)
+                self._state_version += 1
+                add(job, res)
+                self.n_migrations += 1
+                self.migration_bytes += job.profile.param_bytes * job.num_gpus
+                moved += 1
+        self.event_log.append((self.now, "defrag", moved, 0, moved))
+        if moved:
+            self._ops[2]()      # packed capacity may admit queued jobs
+        self._ops[3]()          # no-op when nothing moved
 
     # =======================================================================
     # v2 engine: dense link arrays, batched rate solve, completion heap
@@ -733,6 +998,10 @@ class ClusterSimulator:
         rj.t_fin = _finish_time(rj, self.now)
         rj.order = self._order_counter
         self._order_counter += 1
+        # version numbers continue across preemption/migration restarts of
+        # the same job id, so stale heap entries from an earlier incarnation
+        # can never alias a fresh one (lazy deletion stays sound)
+        rj.version = self._ver_base.get(job.job_id, 0)
         self.running[job.job_id] = rj
         if rj.uidx is not None:
             self._load[rj.uidx] += rj.uval
@@ -744,6 +1013,7 @@ class ClusterSimulator:
 
     def _remove_running_v2(self, jid: int) -> _RunJobV2:
         rj = self.running.pop(jid)
+        self._ver_base[jid] = rj.version + 1
         if rj.uidx is not None:
             self._load[rj.uidx] -= rj.uval
             self._dirty_cols.append(rj.uidx)
@@ -830,7 +1100,8 @@ class ClusterSimulator:
                 continue
             commit(self.state, res)
             ver = self._state_version = self._state_version + 1
-            job.start_time = self.now
+            if job.start_time is None:     # first start only (see v1 twin)
+                job.start_time = self.now
             self._add_running_v2(job, res)
             self.queue.remove(job)
             changed = True
@@ -838,13 +1109,22 @@ class ClusterSimulator:
 
     def _run_v2(self, arrivals: List[Job], max_time: float) -> None:
         ai = 0
+        ei = 0
+        events = self._events
         heap = self._heap
         running = self.running
         while (ai < len(arrivals) or self.queue or running) \
                 and self.now < max_time:
             next_arrival = arrivals[ai].arrival if ai < len(arrivals) else math.inf
+            next_event = events[ei].time if ei < len(events) else math.inf
+            # progress-gated exactly like the v1 twin (see there): a tick
+            # alone must never keep a dead-ended run alive
+            next_defrag = (self._next_defrag
+                           if (running or ei < len(events)
+                               or ai < len(arrivals)) else math.inf)
             # lazy deletion: drop heap entries whose job finished or whose
-            # rate changed since the push (version mismatch)
+            # rate changed since the push (version mismatch; restarts keep
+            # version numbers monotone per job via _ver_base)
             while heap:
                 t, order, jid, ver = heap[0]
                 rj = running.get(jid)
@@ -853,17 +1133,26 @@ class ClusterSimulator:
                     continue
                 break
             next_finish = heap[0][0] if heap else math.inf
-            t_next = min(next_arrival, next_finish)
-            if t_next is math.inf:
+            t_next = min(next_arrival, next_finish, next_event, next_defrag)
+            if math.isinf(t_next):
                 break
             self.now = t_next
-            if next_finish <= next_arrival and heap:
+            # tie order (shared with v1): finish, event, defrag, arrival
+            if heap and \
+                    next_finish <= min(next_arrival, next_event, next_defrag):
                 _, _, fin_id, _ = heapq.heappop(heap)
                 rj = self._remove_running_v2(fin_id)
                 self._finish_job(rj, fin_id)
                 self._state_version += 1
                 self._try_schedule_v2()
                 self._recompute_rates_v2()
+            elif next_event <= min(next_arrival, next_defrag):
+                ev = events[ei]
+                ei += 1
+                self._handle_event(ev)
+            elif next_defrag <= next_arrival:
+                self._next_defrag += self._defrag_interval
+                self._defrag_pass()
             else:
                 job = arrivals[ai]
                 ai += 1
@@ -876,9 +1165,14 @@ class ClusterSimulator:
             max_time: float = float("inf")) -> MetricsReport:
         jobs = sorted(jobs, key=lambda j: j.arrival)
         self.now = 0.0
+        self._jobs_by_id = {j.job_id: j for j in jobs}
         if self.engine == "v1":
+            self._ops = (self._remove_running, self._add_running,
+                         self._try_schedule, self._recompute_rates)
             self._run_v1(list(jobs), max_time)
         else:
+            self._ops = (self._remove_running_v2, self._add_running_v2,
+                         self._try_schedule_v2, self._recompute_rates_v2)
             self._run_v2(list(jobs), max_time)
         rep = job_metrics(jobs)
         rep.frag_gpu = sum(1 for r in self.frag_reason.values() if r == "gpu")
@@ -886,6 +1180,13 @@ class ClusterSimulator:
                                if r == "network")
         rep.slowdowns = [self.slowdowns[j.job_id] for j in jobs
                          if j.job_id in self.slowdowns]
+        rep.preemptions = self.n_preemptions
+        rep.failures = self.n_failures
+        rep.resizes = self.n_resizes
+        rep.migrations = self.n_migrations
+        rep.migration_bytes = self.migration_bytes
+        rep.frag_series = list(self.frag_series)
+        rep.event_log = list(self.event_log)
         return rep
 
 
@@ -921,4 +1222,5 @@ def simulate(spec: ClusterSpec, jobs: Sequence[Job], strategy=None,
     for j in jobs2:
         j.start_time = None
         j.finish_time = None
+        j.remaining_iters = None   # restart state never leaks across runs
     return sim.run(jobs2, max_time=config.max_time)

@@ -104,6 +104,14 @@ class Strategy:
     #: Set False when placement can fail irreproducibly (e.g. a wall-clock
     #: -limited MILP).
     memoize_failures: bool = True
+    #: running jobs may be checkpoint-migrated by the defragmentation pass
+    #: (``SimConfig.defrag_interval``): the engines periodically try to
+    #: re-place each running job through :meth:`place` and move it when the
+    #: new placement is strictly more local (fewer leafs, then fewer
+    #: servers), charging ``SimConfig.migration_iters`` of restart work.
+    #: Leave False when a placement embeds state a re-place cannot rebuild
+    #: (e.g. OCS cross-connect rewiring).
+    supports_migration: bool = False
     #: queueing policies this strategy supports (subset of
     #: :data:`repro.core.scheduler.QUEUE_POLICIES`)
     queue_policies: Tuple[str, ...] = QUEUE_POLICIES

@@ -45,6 +45,7 @@ class BestStrategy(Strategy):
     name = "best"
     description = "ideal single big switch: contention-free upper bound"
     isolated = True
+    supports_migration = True
 
     def make_routing(self, spec, seed):
         return IdealRouting(spec)
@@ -95,6 +96,9 @@ class VClosStrategy(Strategy):
     # stage-2 falls back to a wall-clock-limited MILP: a timeout failure is
     # not reproducible, so the v2 engine must retry instead of caching it
     memoize_failures = False
+    # isolated placements pin no cross-connect state, so checkpoint
+    # migration can repack them to reclaim contiguous leaf capacity
+    supports_migration = True
 
     def place(self, ctx, job_id, num_gpus, job=None):
         return vclos_place(ctx.state, job_id, num_gpus,

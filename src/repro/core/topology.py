@@ -347,6 +347,28 @@ class FabricState:
             if not self.link_owner[key]:
                 del self.link_owner[key]
 
+    def unreserve_links(self, job_id: int,
+                        links: Dict[Tuple[int, int], int]) -> None:
+        """Return ``links`` channels reserved by ``job_id`` — the targeted
+        inverse of :meth:`reserve_links`.  Unlike :meth:`release_job` this
+        touches only the named (leaf, spine) pairs, so one owner (e.g. the
+        link-failure fence) can release a single link while keeping its
+        other holdings."""
+        for (n, m), cnt in links.items():
+            if cnt <= 0:
+                continue
+            held = self.link_owner.get((n, m), {})
+            have = held.get(job_id, 0)
+            if have < cnt:
+                raise ValueError(f"job {job_id} holds {have} channels on "
+                                 f"link ({n},{m}), cannot release {cnt}")
+            if have == cnt:
+                del held[job_id]
+            else:
+                held[job_id] = have - cnt
+            if not held:
+                self.link_owner.pop((n, m), None)
+
     # -- OCS rewiring ----------------------------------------------------------
     def rewire(self, moves: List[Tuple[int, int, int]]) -> None:
         """Apply OCS circuit moves ``(ocs_k, leaf_port, new_spine_port)``.

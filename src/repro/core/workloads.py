@@ -29,8 +29,10 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from .events import ClusterEvent
 from .jobs import (BATCHES, HELIOS_SIZE_MIX, PROFILES, TPUV4_SIZE_MIX, Job,
                    weighted_choice)
+from .topology import ClusterSpec
 
 SizeMix = Sequence[Tuple[int, float]]
 
@@ -66,6 +68,27 @@ class WorkloadSpec:
     max_gpus: Optional[int] = None
     deadline_slack: Optional[Tuple[float, float]] = None
     seed: int = 0
+    # -- dynamic-cluster churn (consumed by generate_events, NOT by
+    # generate_trace: the job trace for a given seed is identical with or
+    # without churn, so churn sweeps are paired-sample ablations) ----------
+    #: fraction of jobs hit by one mid-run `preempt` event
+    preempt_fraction: float = 0.0
+    #: fraction of jobs hit by one elastic `resize` (×2 grow or ÷2 shrink)
+    resize_fraction: float = 0.0
+    #: mean time between server failures (seconds); None/0 disables
+    server_mtbf: Optional[float] = None
+    #: mean time between single-link failures (seconds); None/0 disables
+    link_mtbf: Optional[float] = None
+    #: outage length of one failure (seconds)
+    fail_duration: float = 1800.0
+    #: checkpoint-restart cost charged to every killed/preempted job, in
+    #: iterations of redone work
+    restart_iters: float = 50.0
+
+    @property
+    def has_churn(self) -> bool:
+        return bool(self.preempt_fraction or self.resize_fraction
+                    or self.server_mtbf or self.link_mtbf)
 
     def resolve_mix(self) -> SizeMix:
         if isinstance(self.size_mix, str):
@@ -121,6 +144,78 @@ def poisson_trace(num_jobs: int = 1000, mean_interarrival: float = 120.0,
     return generate_trace(WorkloadSpec(num_jobs=num_jobs,
                                  mean_interarrival=mean_interarrival,
                                  size_mix=size_mix, seed=seed, **kwargs))
+
+
+# ---------------------------------------------------------------------------
+# Dynamic-event traces (repro.core.events)
+# ---------------------------------------------------------------------------
+
+def generate_events(spec: WorkloadSpec, jobs: Sequence[Job],
+                    cluster: ClusterSpec) -> List[ClusterEvent]:
+    """Materialise ``spec``'s churn fields into a sorted event trace for
+    ``jobs`` on ``cluster``.  Deterministic in ``spec.seed`` — and drawn
+    from a *separate* RNG stream, so the job trace of
+    :func:`generate_trace` is untouched by churn parameters (golden JCTs
+    survive; churn ablations stay paired).
+
+    Per-job events (preempt/resize) land at ``arrival + U(0.25, 1.25) ×
+    ideal_runtime`` — mostly mid-run, sometimes after a short job already
+    finished (a no-op, like real preemption races).  Failures are Poisson
+    arrivals over 1.25× the arrival span plus one outage; overlapping
+    failures of the same resource are dropped so every ``*-fail`` pairs
+    with exactly one ``*-recover`` ``fail_duration`` later.
+    """
+    rng = np.random.default_rng([spec.seed, 0xD1CE])
+    events: List[ClusterEvent] = []
+    if not jobs:
+        return events
+    for j in jobs:
+        if spec.preempt_fraction and rng.random() < spec.preempt_fraction:
+            t = j.arrival + float(rng.uniform(0.25, 1.25)) * j.ideal_runtime()
+            events.append(ClusterEvent(time=t, kind="preempt",
+                                       job_id=j.job_id,
+                                       restart_iters=spec.restart_iters))
+        if spec.resize_fraction and rng.random() < spec.resize_fraction:
+            t = j.arrival + float(rng.uniform(0.25, 1.25)) * j.ideal_runtime()
+            new = (j.num_gpus * 2 if rng.random() < 0.5
+                   else max(1, j.num_gpus // 2))
+            events.append(ClusterEvent(time=t, kind="resize",
+                                       job_id=j.job_id,
+                                       new_gpus=min(new, cluster.num_gpus),
+                                       restart_iters=spec.restart_iters))
+    horizon = max(j.arrival for j in jobs) * 1.25 + spec.fail_duration
+    if spec.server_mtbf:
+        busy: Dict[int, float] = {}       # server -> down-until
+
+        t = float(rng.exponential(spec.server_mtbf))
+        while t < horizon:
+            sv = int(rng.integers(cluster.num_servers))
+            if busy.get(sv, -1.0) < t:
+                busy[sv] = t + spec.fail_duration
+                events.append(ClusterEvent(
+                    time=t, kind="server-fail", server=sv,
+                    restart_iters=spec.restart_iters))
+                events.append(ClusterEvent(
+                    time=t + spec.fail_duration, kind="server-recover",
+                    server=sv))
+            t += float(rng.exponential(spec.server_mtbf))
+    if spec.link_mtbf:
+        busy_l: Dict[Tuple[int, int], float] = {}
+        t = float(rng.exponential(spec.link_mtbf))
+        while t < horizon:
+            n = int(rng.integers(cluster.num_leafs))
+            m = int(rng.integers(cluster.num_spines))
+            if busy_l.get((n, m), -1.0) < t:
+                busy_l[(n, m)] = t + spec.fail_duration
+                events.append(ClusterEvent(
+                    time=t, kind="link-fail", leaf=n, spine=m,
+                    restart_iters=spec.restart_iters))
+                events.append(ClusterEvent(
+                    time=t + spec.fail_duration, kind="link-recover",
+                    leaf=n, spine=m))
+            t += float(rng.exponential(spec.link_mtbf))
+    events.sort(key=lambda e: e.time)
+    return events
 
 
 # ---------------------------------------------------------------------------

@@ -127,6 +127,16 @@ def campaign_main(argv) -> None:
                     help="cap job sizes (default: cluster size)")
     ap.add_argument("--deadline-slack", type=_csv(float), default=None,
                     metavar="LO,HI", help="assign deadlines for EDF runs")
+    ap.add_argument("--events", default=None, metavar="K=V[,K=V...]",
+                    help="dynamic-cluster churn for the synthetic workload "
+                         "(repro.core.events): keys preempt / resize "
+                         "(fractions), server-mtbf / link-mtbf (seconds), "
+                         "fail-duration, restart-iters — e.g. "
+                         "--events preempt=0.1,server-mtbf=20000")
+    ap.add_argument("--defrag", type=float, default=0.0, metavar="SECONDS",
+                    help="migration-defragmentation tick period (0 = off; "
+                         "only strategies with supports_migration move "
+                         "jobs, every strategy samples the frag index)")
     ap.add_argument("--trace", default=None,
                     help="CSV arrival trace to replay instead of a "
                          "synthetic workload (see repro.core.workloads)")
@@ -155,11 +165,34 @@ def campaign_main(argv) -> None:
         clash = [name for name, val in
                  (("--jobs", args.jobs), ("--size-mix", args.size_mix),
                   ("--max-gpus", args.max_gpus),
-                  ("--deadline-slack", args.deadline_slack))
+                  ("--deadline-slack", args.deadline_slack),
+                  ("--events", args.events))
                  if val is not None]
         if clash:
             ap.error(f"--trace fixes the workload; {', '.join(clash)} "
                      "only shape synthetic traces and would be ignored")
+
+    churn = {}
+    if args.events:
+        keymap = {"preempt": "preempt_fraction",
+                  "resize": "resize_fraction",
+                  "server-mtbf": "server_mtbf", "link-mtbf": "link_mtbf",
+                  "fail-duration": "fail_duration",
+                  "restart-iters": "restart_iters"}
+        for item in args.events.split(","):
+            key, _, val = item.partition("=")
+            key = key.strip()
+            if key not in keymap or not val:
+                ap.error(f"--events: bad entry {item!r}; use K=V with K in "
+                         f"{sorted(keymap)}")
+            try:
+                fval = float(val)
+            except ValueError:
+                ap.error(f"--events: {key}={val!r} is not a number")
+            if fval < 0:
+                ap.error(f"--events: {key}={val} must be >= 0 "
+                         "(0 disables the knob)")
+            churn[keymap[key]] = fval
 
     spec, ocs_spec = clusters[args.cluster]
     grid = CampaignGrid(strategies=tuple(args.strategies),
@@ -171,11 +204,12 @@ def campaign_main(argv) -> None:
         size_mix="helios" if args.size_mix is None else args.size_mix,
         max_gpus=spec.num_gpus if args.max_gpus is None else args.max_gpus,
         deadline_slack=tuple(args.deadline_slack) if args.deadline_slack
-        else None)
+        else None, **churn)
     config = SimConfig(engine=args.engine,
                        incremental=not args.full_recompute,
                        workers=args.workers,
                        store="stream" if args.stream else "full",
+                       defrag_interval=args.defrag,
                        ilp_time_limit=args.ilp_time_limit)
     result = run_campaign(spec, grid, workload=workload, trace=trace,
                           ocs_spec=ocs_spec, config=config,
@@ -183,10 +217,15 @@ def campaign_main(argv) -> None:
     cols = ("strategy", "scheduler", "load", "n_finished", "jct_mean",
             "jct_p99", "queue_delay_mean", "makespan_mean",
             "contention_ratio_mean")
+    if args.events or args.defrag:
+        cols += ("preemptions", "failures", "resizes", "migrations",
+                 "goodput_mean", "frag_index_mean")
     print(",".join(cols))
     for row in result.aggregate():
-        # contention ratios live in 1.0-1.3: one decimal erases the signal
-        print(",".join(f"{row[c]:.3f}" if c == "contention_ratio_mean"
+        # contention ratios (1.0-1.3) and frag indices (0-1) need three
+        # decimals: one decimal erases the signal
+        print(",".join(f"{row[c]:.3f}" if c in ("contention_ratio_mean",
+                                                "frag_index_mean")
                        else f"{row[c]:.1f}" if isinstance(row[c], float)
                        else str(row[c]) for c in cols))
     if args.out:

@@ -9,6 +9,11 @@ import textwrap
 
 import pytest
 
+# each test spawns a fresh 8-device XLA process (~15-25s): the slowest
+# parity sweeps in the repo — excluded from `make test-fast`, always part
+# of the full `make test` tier-1 run
+pytestmark = pytest.mark.slow
+
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 

@@ -1,7 +1,13 @@
-"""Hypothesis property tests on the paper's theoretical core.
+"""Hypothesis property tests: the paper's theoretical core + the engines.
 
-Lemma 5.1: *any* Leaf-wise Permutation phase is contention-free under *any*
-source-routing strategy (injective per-leaf port→uplink maps).
+Part 1 — Lemma 5.1: *any* Leaf-wise Permutation phase is contention-free
+under *any* source-routing strategy (injective per-leaf port→uplink maps).
+
+Part 2 — simulator invariants under random traces *and random dynamic
+events* (ISSUE 4): work conservation (every job finishes, no resource
+leaks), isolated strategies never over-reserve a link, the applied-event
+clock is monotone, and the v1 ≡ v2 engine bit-parity holds as a property —
+so any violation hypothesis finds shrinks to a minimal regression repro.
 """
 
 import numpy as np
@@ -11,8 +17,12 @@ hypothesis = pytest.importorskip(
     "hypothesis", reason="property tests need the optional `hypothesis` extra")
 from hypothesis import given, settings, strategies as st
 
+from repro.core.config import SimConfig
+from repro.core.events import FAIL_GPU_OWNER, FAIL_LINK_OWNER, ClusterEvent
+from repro.core.jobs import Job
 from repro.core.patterns import is_leafwise_permutation
 from repro.core.routing import SourceRouting, contention
+from repro.core.simulator import ClusterSimulator
 from repro.core.topology import ClusterSpec
 from repro.core.traffic import Flow
 
@@ -101,3 +111,137 @@ def test_checker_rejects_colliding_leaf_targets():
 def test_checker_rejects_non_permutation():
     phase = [Flow(0, 9, 1.0), Flow(0, 10, 1.0)]
     assert not is_leafwise_permutation(phase, SPEC)
+
+
+# ---------------------------------------------------------------------------
+# Part 2 — simulator invariants under random traces + dynamic events.
+# SPEC is the 32-GPU, 4-leaf cluster: small enough that hypothesis examples
+# run in milliseconds, large enough that every placement stage (server,
+# leaf, vClos, multi-leaf) and every event kind is reachable.
+# ---------------------------------------------------------------------------
+
+_EV_MODELS = ("resnet50", "vgg16", "moe")
+
+
+@st.composite
+def churn_scenario(draw):
+    """A random job trace plus a random (self-recovering) event trace.
+
+    Every generated failure pairs with a recovery, so the trace can never
+    permanently shrink the cluster — the precondition of the work
+    -conservation property.  Preempt/resize may target queued, finished or
+    unknown job ids (the engines must treat those as no-ops).
+    """
+    n = draw(st.integers(2, 8))
+    jobs = []
+    t = 0.0
+    for i in range(n):
+        t += draw(st.floats(0.0, 60.0, allow_nan=False,
+                            allow_infinity=False))
+        jobs.append(Job(i, draw(st.sampled_from(_EV_MODELS)),
+                        draw(st.sampled_from([1, 2, 4, 8, 16])), 32, t,
+                        draw(st.integers(1, 200))))
+    span = jobs[-1].arrival + 300.0
+    events = []
+    for _ in range(draw(st.integers(0, 8))):
+        kind = draw(st.sampled_from(("preempt", "resize", "server-fail",
+                                     "link-fail")))
+        et = draw(st.floats(0.0, span, allow_nan=False,
+                            allow_infinity=False))
+        penalty = draw(st.floats(0.0, 100.0, allow_nan=False,
+                                 allow_infinity=False))
+        if kind == "preempt":
+            events.append(ClusterEvent(time=et, kind="preempt",
+                                       job_id=draw(st.integers(0, n + 1)),
+                                       restart_iters=penalty))
+        elif kind == "resize":
+            events.append(ClusterEvent(
+                time=et, kind="resize",
+                job_id=draw(st.integers(0, n + 1)),
+                new_gpus=draw(st.sampled_from([1, 2, 4, 8, 16, 32])),
+                restart_iters=penalty))
+        elif kind == "server-fail":
+            sv = draw(st.integers(0, SPEC.num_servers - 1))
+            dur = draw(st.floats(1.0, 400.0, allow_nan=False,
+                                 allow_infinity=False))
+            events.append(ClusterEvent(time=et, kind="server-fail",
+                                       server=sv, restart_iters=penalty))
+            events.append(ClusterEvent(time=et + dur, kind="server-recover",
+                                       server=sv))
+        else:
+            lf = draw(st.integers(0, SPEC.num_leafs - 1))
+            sp = draw(st.integers(0, SPEC.num_spines - 1))
+            dur = draw(st.floats(1.0, 400.0, allow_nan=False,
+                                 allow_infinity=False))
+            events.append(ClusterEvent(time=et, kind="link-fail", leaf=lf,
+                                       spine=sp, restart_iters=penalty))
+            events.append(ClusterEvent(time=et + dur, kind="link-recover",
+                                       leaf=lf, spine=sp))
+    events.sort(key=lambda e: e.time)
+    return jobs, tuple(events)
+
+
+def _fresh(jobs):
+    return [Job(j.job_id, j.model, j.num_gpus, j.batch_size, j.arrival,
+                j.num_iters) for j in jobs]
+
+
+@settings(max_examples=40, deadline=None)
+@given(scenario=churn_scenario(),
+       strategy=st.sampled_from(("ecmp", "sr", "best")),
+       defrag=st.sampled_from((0.0, 150.0)))
+def test_work_conservation_and_monotone_event_clock(scenario, strategy,
+                                                    defrag):
+    """Every failure recovers, so every job must eventually finish; the
+    applied-event log must be time-ordered; no resource may leak past the
+    run (only unexpired failure fences may remain)."""
+    jobs, events = scenario
+    sim = ClusterSimulator(SPEC, config=SimConfig(
+        strategy=strategy, events=events, defrag_interval=defrag))
+    rep = sim.run(_fresh(jobs))
+    assert rep.n_finished == len(jobs)
+    for j in sim._jobs_by_id.values():
+        assert j.finish_time is not None
+        assert j.start_time >= j.arrival
+        assert j.finish_time >= j.start_time
+    times = [e[0] for e in rep.event_log]
+    assert times == sorted(times)
+    assert all(0.0 <= f <= 1.0 for _, f in rep.frag_series)
+    leaked = {g: o for g, o in sim.state.gpu_owner.items()
+              if o != FAIL_GPU_OWNER}
+    assert leaked == {}
+
+
+@settings(max_examples=30, deadline=None)
+@given(scenario=churn_scenario())
+def test_isolated_strategy_never_over_reserves(scenario):
+    """vClos under churn: reservations stay within link capacity at every
+    instant (FabricState.reserve_links raises on violation, so surviving
+    the run IS the property) and are fully returned afterwards."""
+    jobs, events = scenario
+    sim = ClusterSimulator(SPEC, config=SimConfig(
+        strategy="vclos", events=events, defrag_interval=200.0))
+    rep = sim.run(_fresh(jobs))
+    assert rep.n_finished == len(jobs)
+    for (n, m), holders in sim.state.link_owner.items():
+        # only an unexpired link-failure fence may outlive the run
+        assert set(holders) <= {FAIL_LINK_OWNER}
+        assert sum(holders.values()) <= sim.state.capacity()[n][m]
+
+
+@pytest.mark.slow
+@settings(max_examples=30, deadline=None)
+@given(scenario=churn_scenario(),
+       strategy=st.sampled_from(("ecmp", "sr", "best", "vclos")))
+def test_engine_bit_parity_is_a_property(scenario, strategy):
+    """v1 ≡ v2 under arbitrary churn — hypothesis shrinks any divergence
+    to a minimal trace, which becomes a free regression repro."""
+    jobs, events = scenario
+    cfg = SimConfig(strategy=strategy, events=events, defrag_interval=150.0)
+    v1 = ClusterSimulator(SPEC, config=cfg, engine="v1").run(_fresh(jobs))
+    v2 = ClusterSimulator(SPEC, config=cfg, engine="v2").run(_fresh(jobs))
+    assert v1.jcts == v2.jcts
+    assert v1.jwts == v2.jwts
+    assert v1.slowdowns == v2.slowdowns
+    assert v1.event_log == v2.event_log
+    assert v1.frag_series == v2.frag_series
