@@ -2,7 +2,8 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-fast bench-smoke bench bench-gate docs-lint check
+.PHONY: test test-fast bench-smoke bench bench-gate docs-lint \
+        docs-lint-fast check report report-smoke report-paper examples-smoke
 
 test:            ## tier-1 verification (what CI gates on) — the full suite
 	$(PY) -m pytest -x -q
@@ -13,8 +14,8 @@ test-fast:       ## tier-1 minus @pytest.mark.slow parity sweeps (~fast inner lo
 bench-smoke:     ## ~60s campaign smoke: v2-vs-v1 speedup, JCT identity, parallel path
 	$(PY) -m benchmarks.bench_campaign
 
-bench-json:      ## campaign + scale + fairshare benches -> BENCH_campaign.json (+ gate)
-	$(PY) -m benchmarks.run --only campaign,scale,fairshare --json
+bench-json:      ## campaign + scale + fairshare + report benches -> BENCH_campaign.json (+ gate)
+	$(PY) -m benchmarks.run --only campaign,scale,fairshare,report --json
 	$(PY) scripts/bench_gate.py
 
 bench-gate:      ## fail if the committed BENCH_campaign.json lost the 5x target
@@ -23,7 +24,25 @@ bench-gate:      ## fail if the committed BENCH_campaign.json lost the 5x target
 bench:           ## every paper table/figure benchmark
 	$(PY) -m benchmarks.run
 
-docs-lint:       ## README/docs stay honest against the code
+docs-lint:       ## README/docs stay honest against the code (incl. results drift)
 	$(PY) scripts/docs_lint.py
 
-check: docs-lint bench-gate test-fast   ## lint + perf gate + fast tests (full tier-1: make test)
+report:          ## regenerate the committed docs/results.md gallery (smoke scale)
+	$(PY) -m repro.launch.report --scale smoke
+
+report-smoke:    ## fail if docs/results.md or smoke CSVs drift from a fresh run
+	$(PY) -m repro.launch.report --scale smoke --check
+
+report-paper:    ## full figure suite (v2 streaming, 2048-GPU sweep) -> reports/paper/
+	$(PY) -m repro.launch.report --scale paper
+
+examples-smoke:  ## examples compile + their repro.* imports resolve + fast ones run
+	$(PY) scripts/examples_smoke.py
+
+# check runs docs-lint with --no-results: report-smoke already rebuilds the
+# smoke figure suite and byte-compares the gallery, so the drift check runs
+# exactly once per check (standalone `make docs-lint` keeps the full set)
+check: docs-lint-fast bench-gate examples-smoke report-smoke test-fast   ## lint + perf gate + fast tests (full tier-1: make test)
+
+docs-lint-fast:
+	$(PY) scripts/docs_lint.py --no-results

@@ -1,0 +1,44 @@
+"""Reproduction-report smoke cell: how long the paper-figure suite takes.
+
+Times the renderer-free data path of every registered figure spec at smoke
+scale (``repro.core.figures.build_all``) and records whether the committed
+``docs/results.md`` gallery still matches the freshly built tables
+(``golden_ok`` — the same comparison ``scripts/docs_lint.py`` gates on).
+``--full`` runs the paper-scale suite instead (minutes: v2 streaming
+engine, the 2048-GPU CDF sweep) and reports per-figure row counts, so the
+full pipeline's cost is on record next to the campaign benches.
+
+  PYTHONPATH=src python -m benchmarks.bench_report [--full]
+"""
+
+from __future__ import annotations
+
+from .common import timed
+
+
+def run(fast: bool = True):
+    from repro.core.figures import build_all, qualitative_checks
+
+    scale = "smoke" if fast else "paper"
+    tables = []
+
+    def suite():
+        tables[:] = build_all(scale)
+        return {"figures": len(tables),
+                "rows_total": sum(len(t.rows) for t in tables)}
+    row = timed(f"report_suite[{scale}]", suite)
+
+    derived = dict(row["derived"])
+    derived["orderings_ok"] = not qualitative_checks(tables)
+    if fast:
+        # golden_ok mirrors the docs-lint drift gate: the committed gallery
+        # and smoke CSVs match a regenerated run byte-for-byte
+        from repro.launch.report import check_results
+        derived["golden_ok"] = not check_results(tables)
+    row["derived"] = derived
+    return [row]
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run())

@@ -30,12 +30,14 @@ MODULES = [
     ("campaign", "benchmarks.bench_campaign"),
     ("scale", "benchmarks.bench_scale"),
     ("fairshare", "benchmarks.bench_fairshare"),
+    ("report", "benchmarks.bench_report"),
     ("roofline", "benchmarks.roofline"),
 ]
 
 #: rows whose ``derived`` payload is copied into the JSON summary
 SUMMARY_PREFIXES = ("campaign_engine", "campaign_churn", "scale_engine",
-                    "scale_campaign_cell", "campaign_parallel")
+                    "scale_campaign_cell", "campaign_parallel",
+                    "report_suite")
 
 
 def write_json(path: str, rows, failures: int, full: bool) -> None:

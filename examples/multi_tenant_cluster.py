@@ -1,27 +1,35 @@
 """Multi-tenant cluster study: replay a job stream under every scheduling
 strategy and reproduce the paper's headline ordering (Fig. 12/13).
 
+Uses the first-class workload API (`WorkloadSpec` → `generate_trace`) and
+the strategy registry — any plugin name from
+`python -m repro.launch.sweep campaign --list-strategies` drops into the
+strategy tuple below.  The full sweep with figures is
+`python -m repro.launch.report` (see docs/results.md).
+
 Run:  PYTHONPATH=src python examples/multi_tenant_cluster.py [--jobs 300]
 """
 import argparse
 import time
 
-from repro.core import (CLUSTER512, CLUSTER512_OCS, cluster_dataset,
-                        simulate)
+from repro.core import (CLUSTER512, CLUSTER512_OCS, WorkloadSpec,
+                        generate_trace, simulate)
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--jobs", type=int, default=300)
 ap.add_argument("--lam", type=float, default=120.0)
 args = ap.parse_args()
 
-jobs = cluster_dataset(num_jobs=args.jobs, lam=args.lam, seed=0)
+jobs = generate_trace(WorkloadSpec(num_jobs=args.jobs,
+                                   mean_interarrival=args.lam, seed=0))
 print(f"{args.jobs} jobs, Poisson λ={args.lam}s, CLUSTER512")
-print(f"{'strategy':12s} {'Avg.JRT':>10s} {'Avg.JWT':>10s} {'Avg.JCT':>10s} "
+print(f"{'strategy':20s} {'Avg.JRT':>10s} {'Avg.JWT':>10s} {'Avg.JCT':>10s} "
       f"{'Stability':>10s} {'frag g/n':>9s}")
-for strat in ("best", "ocs-vclos", "vclos", "sr", "balanced", "ecmp"):
+for strat in ("best", "ocs-vclos", "vclos", "sr", "balanced",
+              "contention-affinity", "ecmp"):
     spec = CLUSTER512_OCS if strat == "ocs-vclos" else CLUSTER512
     t0 = time.time()
     rep = simulate(spec, jobs, strat)
-    print(f"{strat:12s} {rep.avg_jrt:10.1f} {rep.avg_jwt:10.1f} "
+    print(f"{strat:20s} {rep.avg_jrt:10.1f} {rep.avg_jwt:10.1f} "
           f"{rep.avg_jct:10.1f} {rep.stability:10.1f} "
           f"{rep.frag_gpu:4d}/{rep.frag_network:<4d} [{time.time()-t0:.1f}s]")

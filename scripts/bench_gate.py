@@ -47,6 +47,15 @@ def main() -> int:
             errors.append(f"{name}: engines no longer bit-identical")
         if "identical_to_serial" in row and not row["identical_to_serial"]:
             errors.append(f"{name}: parallel merge no longer matches serial")
+        # report_suite cells (benchmarks/bench_report.py) are optional —
+        # absent in older recordings and in --only runs — but when present
+        # their honesty flags gate like the engine ones
+        if "golden_ok" in row and not row["golden_ok"]:
+            errors.append(f"{name}: docs/results.md gallery drifted from "
+                          f"the regenerated smoke figures")
+        if "orderings_ok" in row and not row["orderings_ok"]:
+            errors.append(f"{name}: reproduced figures lost the paper's "
+                          f"qualitative orderings")
 
     if errors:
         print("bench-gate: FAILED")

@@ -2,13 +2,18 @@
 """Documentation lint: keep README/docs honest against the code.
 
 Checks:
-  1. required docs exist (README, docs/{architecture,simulator,strategies}.md)
+  1. required docs exist (README, docs/{architecture,simulator,strategies,
+     events,reproduction,results}.md)
   2. every `src/...` path mentioned in them exists on disk
   3. relative markdown links resolve
   4. the README strategy glossary covers every simulator strategy
   5. fenced ``python`` snippets in the docs at least compile
+  6. the generated results gallery is in sync: the smoke figure suite is
+     regenerated (seconds) and ``docs/results.md`` + the committed smoke
+     CSVs must match byte-for-byte (``repro.launch.report.check_results``)
 
 Run: python scripts/docs_lint.py   (or: make docs-lint)
+Skip the slow drift check during doc-only editing: --no-results
 """
 
 from __future__ import annotations
@@ -19,7 +24,8 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 DOCS = ["README.md", "docs/architecture.md", "docs/simulator.md",
-        "docs/strategies.md", "docs/events.md"]
+        "docs/strategies.md", "docs/events.md", "docs/reproduction.md",
+        "docs/results.md"]
 
 errors: list[str] = []
 
@@ -73,13 +79,21 @@ def main() -> int:
             except SyntaxError as e:
                 check(False, f"{rel}: snippet {i} does not compile: {e}")
 
+    # 6. generated results gallery in sync with a regenerated smoke run
+    checked_results = "--no-results" not in sys.argv
+    if checked_results:
+        from repro.launch.report import check_results
+        for e in check_results():
+            check(False, e)
+
     if errors:
         print("docs-lint: FAILED")
         for e in errors:
             print(f"  - {e}")
         return 1
     n_snippets = sum(len(re.findall(r"```python", t)) for t in texts.values())
-    print(f"docs-lint: OK ({len(texts)} docs, {n_snippets} snippets)")
+    print(f"docs-lint: OK ({len(texts)} docs, {n_snippets} snippets, "
+          f"results gallery {'in sync' if checked_results else 'UNCHECKED'})")
     return 0
 
 

@@ -15,6 +15,7 @@ Layers:
   workloads  — reproducible Poisson/CSV arrival traces for campaigns
   simulator  — event-driven flow-level cluster simulator (incremental rates)
   campaign   — strategy × policy × load × seed sweep driver + aggregation
+  figures    — paper-figure experiment specs (smoke/paper scales, tabular)
   scheduler  — online scheduler facade for the training launcher
   rankmap    — vClos placement -> JAX mesh device order
   metrics    — JRT / JWT / JCT / Stability (+ CDF helpers)
@@ -43,13 +44,16 @@ from .events import (EVENT_KINDS, ClusterEvent, frag_index, validate_events)
 from .workloads import (SIZE_MIXES, WorkloadSpec, generate_events,
                         generate_trace, load_trace_csv, poisson_trace,
                         save_trace_csv, trace_stats)
-from .metrics import MetricsReport, cdf, job_metrics
+from .metrics import MetricsReport, cdf, cdf_table, job_metrics
 from .strategies import (Strategy, get_strategy, register_strategy,
                          registered_strategies, strategy_names,
                          unregister_strategy)
 from .config import ENGINES, STORES, SimConfig
 from .simulator import STRATEGIES, ClusterSimulator, simulate
-from .campaign import (CampaignGrid, CampaignResult, CellResult, run_campaign)
+from .campaign import (AGGREGATE_COLUMNS, CampaignGrid, CampaignResult,
+                       CellResult, run_campaign)
+from .figures import (FIGURES, FigureSpec, FigureTable, build_all,
+                      build_figure, figure_names, qualitative_checks)
 from .scheduler import (Grant, IsolatedScheduler, QUEUE_POLICIES, order_queue)
 from .rankmap import leaf_contiguous_order, mesh_device_order
 

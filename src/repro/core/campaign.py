@@ -96,6 +96,17 @@ class CellResult:
         return (self.strategy, self.scheduler, self.load)
 
 
+#: stable column order of :meth:`CampaignResult.aggregate` rows — the
+#: contract tabular consumers (CSV export, :mod:`repro.core.figures`)
+#: rely on; append-only across PRs
+AGGREGATE_COLUMNS: Tuple[str, ...] = (
+    "strategy", "scheduler", "load", "seeds", "n_finished",
+    "jct_mean", "jct_p99", "queue_delay_mean", "queue_delay_p99",
+    "makespan_mean", "contention_ratio_mean", "frag_gpu", "frag_network",
+    "preemptions", "failures", "resizes", "migrations", "migration_bytes",
+    "goodput_mean", "frag_index_mean", "sim_seconds")
+
+
 @dataclass
 class CampaignResult:
     spec: ClusterSpec
@@ -199,6 +210,30 @@ class CampaignResult:
                 num_points: int = 50) -> List[List[float]]:
         return self._pooled_cdf("jcts", strategy, scheduler, load,
                                 num_points)
+
+    def to_table(self, columns: Optional[Sequence[str]] = None,
+                 ) -> Tuple[Tuple[str, ...], List[Tuple]]:
+        """The :meth:`aggregate` rows as ``(columns, rows)`` with a stable,
+        explicit column order (default :data:`AGGREGATE_COLUMNS`) — the
+        tabular export figure specs and CSV writers build on.  Unknown
+        column names raise instead of emitting ragged rows."""
+        cols = tuple(columns) if columns is not None else AGGREGATE_COLUMNS
+        rows = self.aggregate()
+        for c in cols:
+            if rows and c not in rows[0]:
+                raise KeyError(f"unknown campaign column {c!r}; "
+                               f"choose from {AGGREGATE_COLUMNS}")
+        return cols, [tuple(r[c] for c in cols) for r in rows]
+
+    def write_csv(self, path: str,
+                  columns: Optional[Sequence[str]] = None) -> None:
+        """Write the aggregate table as CSV in stable column order."""
+        import csv as _csv
+        cols, rows = self.to_table(columns)
+        with open(path, "w", newline="") as f:
+            w = _csv.writer(f)
+            w.writerow(cols)
+            w.writerows(rows)
 
     # -- serialisation ------------------------------------------------------
     def to_json(self) -> Dict:

@@ -139,6 +139,19 @@ def job_metrics(jobs: Sequence[Job]) -> MetricsReport:
         jcts=[float(c) for c in jct], jwts=[float(w) for w in jwt])
 
 
+def cdf_table(samples_by_series: Dict[str, Sequence[float]],
+              num_points: int = 50) -> List[tuple]:
+    """Long-form CDF table: ``(series, value, cum_frac)`` rows, series in
+    insertion order — the layout figure renderers and CSV exports consume
+    (:mod:`repro.core.figures`).  Each series is down-sampled by
+    :func:`cdf` to at most ``num_points`` retained order statistics."""
+    rows: List[tuple] = []
+    for name, samples in samples_by_series.items():
+        for value, frac in cdf(samples, num_points):
+            rows.append((name, value, frac))
+    return rows
+
+
 def cdf(samples: Sequence[float], num_points: int = 50) -> List[List[float]]:
     """Empirical CDF of ``samples`` down-sampled to ``num_points`` rows of
     ``[value, cumulative_fraction]`` — compact enough to embed in JSON."""

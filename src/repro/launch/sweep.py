@@ -25,6 +25,11 @@ Strategies resolve against the plugin registry
 (``repro.core.strategies``) — ``--list-strategies`` prints every
 registered plugin, including ones registered at runtime, and unknown
 names error out enumerating them.
+
+``repro.launch.report`` (the paper-figure reproduction report) shares
+this module's CLI plumbing (:func:`csv_arg`); :func:`cluster_presets`
+factors the cluster-preset map out of ``campaign_main`` for any
+preset-aware tool.
 """
 
 from __future__ import annotations
@@ -87,22 +92,34 @@ def dryrun_main(argv) -> None:
                     print(f"[sweep] {arch} {shape} {mesh} TIMEOUT", flush=True)
 
 
-def _csv(kind):
+def csv_arg(kind):
+    """argparse ``type=`` factory for comma-separated lists — shared CLI
+    plumbing with ``repro.launch.report``."""
     def parse(s: str):
         return tuple(kind(v.strip()) for v in s.split(",") if v.strip())
     return parse
 
 
-def campaign_main(argv) -> None:
+_csv = csv_arg   # historical alias
+
+
+def cluster_presets():
+    """Name → ``(spec, ocs_spec)`` map shared by the ``campaign`` and
+    ``report`` CLIs (lazy import: the ``dryrun`` path never pays for
+    ``repro.core``)."""
     from repro.core import (CLUSTER512, CLUSTER512_OCS, CLUSTER2048,
-                            CLUSTER2048_OCS, ENGINES, TESTBED32,
-                            CampaignGrid, SimConfig, WorkloadSpec,
+                            CLUSTER2048_OCS, TESTBED32)
+    return {"512": (CLUSTER512, CLUSTER512_OCS),
+            "2048": (CLUSTER2048, CLUSTER2048_OCS),
+            "testbed": (TESTBED32, None)}
+
+
+def campaign_main(argv) -> None:
+    from repro.core import (ENGINES, CampaignGrid, SimConfig, WorkloadSpec,
                             load_trace_csv, registered_strategies,
                             run_campaign)
 
-    clusters = {"512": (CLUSTER512, CLUSTER512_OCS),
-                "2048": (CLUSTER2048, CLUSTER2048_OCS),
-                "testbed": (TESTBED32, None)}
+    clusters = cluster_presets()
     ap = argparse.ArgumentParser(
         prog="sweep campaign",
         description="strategy × policy × load × seed simulation campaign")

@@ -1,0 +1,152 @@
+"""Paper-figure spec tests: determinism, smoke goldens, renderer-free data
+path, gallery sync, and (matplotlib-gated) rendering."""
+
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.core.figures import (FIGURES, SCALES, build_all, build_figure,
+                                figure_names, qualitative_checks)
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture(scope="module")
+def smoke_tables():
+    return build_all("smoke")
+
+
+def _by_name(tables):
+    return {t.name: t for t in tables}
+
+
+def test_registry_shape():
+    names = figure_names()
+    assert names == ("jct-vs-load", "contention-cdf", "frag-timeline",
+                     "ocs-comparison")
+    for n in names:
+        assert FIGURES[n].name == n
+
+
+def test_unknown_names_raise():
+    with pytest.raises(ValueError, match="unknown figure"):
+        build_figure("nope")
+    with pytest.raises(ValueError, match="unknown scale"):
+        build_figure("jct-vs-load", scale="huge")
+    assert "huge" not in SCALES
+
+
+def test_same_seed_identical_tables(smoke_tables):
+    """Spec determinism: rebuilding a figure reproduces the identical
+    FigureTable (columns, rows, meta — everything)."""
+    again = build_figure("jct-vs-load", "smoke")
+    assert again == _by_name(smoke_tables)["jct-vs-load"]
+
+
+def test_tables_are_plain_scalars(smoke_tables):
+    for t in smoke_tables:
+        assert t.rows, t.name
+        for r in t.rows:
+            assert len(r) == len(t.columns)
+            assert all(isinstance(v, (str, int, float)) for v in r)
+
+
+def test_jct_vs_load_smoke_golden(smoke_tables):
+    t = _by_name(smoke_tables)["jct-vs-load"]
+    got = {(r[0], r[1]): r[2] for r in t.rows}   # (strategy, load) -> jct
+    assert got[("ecmp", 120.0)] == 5528.4
+    assert got[("sr", 120.0)] == 4342.1
+    assert got[("vclos", 120.0)] == 4071.7
+    assert got[("best", 200.0)] == 4035.3
+
+
+def test_ocs_comparison_smoke_golden(smoke_tables):
+    """Reuses the golden-trace workload, so two of these numbers are the
+    same ecmp=13417.8 / sr=3731.4 pinned by test_campaign.py."""
+    t = _by_name(smoke_tables)["ocs-comparison"]
+    got = {r[0]: (r[1], r[4]) for r in t.rows}   # strategy -> (jct, frag_net)
+    assert got["ecmp"][0] == 13417.8
+    assert got["sr"][0] == 3731.4
+    assert got["ocs-vclos"] == (2957.9, 0)       # rewiring rescues the
+    assert got["vclos"] == (3032.4, 2)           # network-blocked placements
+
+
+def test_contention_cdf_smoke_isolation(smoke_tables):
+    t = _by_name(smoke_tables)["contention-cdf"]
+    i_s, i_v = t.columns.index("strategy"), t.columns.index("slowdown")
+    vclos = [r[i_v] for r in t.rows if r[i_s] == "vclos"]
+    assert vclos and all(v == 1.0 for v in vclos)
+    ecmp = [r[i_v] for r in t.rows if r[i_s] == "ecmp"]
+    assert max(ecmp) > 1.5          # the hash-collision tail exists
+
+
+def test_frag_timeline_smoke_golden(smoke_tables):
+    t = _by_name(smoke_tables)["frag-timeline"]
+    meta = t.meta_dict()
+    assert meta["migrations[best (defrag)]"] == 3
+    assert meta["migrations[best (no defrag)]"] == 0
+    # scattered placement strands most idle capacity, packed stays low
+    assert meta["mean_frag[ocs-relax (scattered)]"] == pytest.approx(
+        0.617, abs=1e-4)
+    assert meta["mean_frag[best (defrag)]"] < 0.15
+    assert t.series_values() == ["best (defrag)", "best (no defrag)",
+                                 "ocs-relax (scattered)"]
+
+
+def test_qualitative_orderings_hold(smoke_tables):
+    assert qualitative_checks(smoke_tables) == []
+
+
+def test_data_path_needs_no_matplotlib():
+    """tier-1 never needs a renderer: building figures with matplotlib
+    import-blocked must work."""
+    code = (
+        "import sys; sys.modules['matplotlib'] = None\n"
+        "from repro.core.figures import build_figure\n"
+        "t = build_figure('ocs-comparison', 'smoke')\n"
+        "from repro.launch.report import csv_text, render_markdown\n"
+        "assert csv_text(t).startswith('strategy,')\n"
+        "assert 'ocs-vclos' in render_markdown([t], 'smoke')\n"
+        "print('RENDERER_FREE_OK')\n")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd=ROOT,
+                       env={"PYTHONPATH": str(ROOT / "src")})
+    assert r.returncode == 0, r.stderr
+    assert "RENDERER_FREE_OK" in r.stdout
+
+
+def test_results_gallery_in_sync(smoke_tables):
+    """The committed docs/results.md + smoke CSVs match a regenerated run
+    byte-for-byte — the same gate scripts/docs_lint.py enforces."""
+    from repro.launch.report import check_results
+    assert check_results(smoke_tables) == []
+
+
+def test_csv_text_stable(smoke_tables):
+    from repro.launch.report import csv_text
+    t = _by_name(smoke_tables)["jct-vs-load"]
+    text = csv_text(t)
+    assert text.splitlines()[0] == ",".join(t.columns)
+    assert csv_text(t) == text
+
+
+def test_render_figures_svg(tmp_path, smoke_tables):
+    pytest.importorskip("matplotlib")
+    from repro.launch.report import render_figure
+    for t in smoke_tables:            # one per chart kind
+        out = tmp_path / f"{t.name}.svg"
+        assert render_figure(t, out)
+        head = out.read_text()[:200]
+        assert out.stat().st_size > 1000 and "<?xml" in head, t.name
+
+
+def test_render_is_deterministic(tmp_path, smoke_tables):
+    pytest.importorskip("matplotlib")
+    from repro.launch.report import render_figure
+    t = _by_name(smoke_tables)["ocs-comparison"]
+    a, b = tmp_path / "a.svg", tmp_path / "b.svg"
+    render_figure(t, a)
+    render_figure(t, b)
+    assert a.read_bytes() == b.read_bytes()
