@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-fast bench-smoke bench bench-gate docs-lint \
+.PHONY: test test-fast test-batched bench-smoke bench bench-gate docs-lint \
         docs-lint-fast check report report-smoke report-paper examples-smoke
 
 test:            ## tier-1 verification (what CI gates on) — the full suite
@@ -11,11 +11,14 @@ test:            ## tier-1 verification (what CI gates on) — the full suite
 test-fast:       ## tier-1 minus @pytest.mark.slow parity sweeps (~fast inner loop)
 	$(PY) -m pytest -x -q -m "not slow"
 
+test-batched:    ## lane-engine differential suite incl. slow parity sweeps (docs/batched.md)
+	$(PY) -m pytest -x -q tests/test_batched.py tests/test_kernels.py
+
 bench-smoke:     ## ~60s campaign smoke: v2-vs-v1 speedup, JCT identity, parallel path
 	$(PY) -m benchmarks.bench_campaign
 
-bench-json:      ## campaign + scale + fairshare + report benches -> BENCH_campaign.json (+ gate)
-	$(PY) -m benchmarks.run --only campaign,scale,fairshare,report --json
+bench-json:      ## campaign + batched + scale + fairshare + report benches -> BENCH_campaign.json (+ gate)
+	$(PY) -m benchmarks.run --only campaign,batched,scale,fairshare,report --json
 	$(PY) scripts/bench_gate.py
 
 bench-gate:      ## fail if the committed BENCH_campaign.json lost the 5x target
@@ -42,7 +45,7 @@ examples-smoke:  ## examples compile + their repro.* imports resolve + fast ones
 # check runs docs-lint with --no-results: report-smoke already rebuilds the
 # smoke figure suite and byte-compares the gallery, so the drift check runs
 # exactly once per check (standalone `make docs-lint` keeps the full set)
-check: docs-lint-fast bench-gate examples-smoke report-smoke test-fast   ## lint + perf gate + fast tests (full tier-1: make test)
+check: docs-lint-fast bench-gate examples-smoke report-smoke test-fast test-batched   ## lint + perf gate + fast tests (full tier-1: make test)
 
 docs-lint-fast:
 	$(PY) scripts/docs_lint.py --no-results

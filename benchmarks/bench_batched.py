@@ -1,0 +1,134 @@
+"""Lane-batched engine benchmark — the PR 6 acceptance cell.
+
+(1) ``bench_batched[lane_engine]`` — the gated cell: a 144-cell campaign
+    grid (best/sr/ecmp × 12 seeds × 4 loads, 400 jobs/cell, 2048 GPUs)
+    through one :func:`repro.core.batched.run_lanes` call versus the same
+    cells through the serial v2 heap loop.  Paired-median protocol like
+    ``bench_campaign``: each repeat times both sides back-to-back and
+    contributes one ratio; trace generation and job copying are excluded
+    from both sides.  Schedules must be bit-identical
+    (``identical_jct``), and the acceptance flag
+    ``meets_3x_on_64cell_grid`` requires a ≥3x median speedup on this
+    ≥64-cell grid — ``scripts/bench_gate.py`` enforces both whenever the
+    cell is present in the recording.
+(2) ``bench_batched[report_paper]`` — the ``--scale paper`` report time
+    on record: the paper-scale ``jct-vs-load`` campaign figure built with
+    ``engine="batched"`` (qualifying cells take the lane engine, the rest
+    delegate to v2 — same dispatch the ``--engine batched`` report CLI
+    uses).
+
+  PYTHONPATH=src python -m benchmarks.bench_batched [--full]
+"""
+
+from __future__ import annotations
+
+import copy
+import time
+
+import numpy as np
+
+from repro.core.batched import run_lanes
+from repro.core.simulator import ClusterSimulator
+from repro.core.strategies import get_strategy
+from repro.core.topology import CLUSTER2048
+from repro.core.workloads import WorkloadSpec, generate_trace
+
+from .common import timed
+
+#: the gated grid — ≥64 cells per the acceptance criterion; small jobs
+#: (max 16 GPUs on 8-GPU servers) keep every lane busy so the lockstep
+#: rounds amortise across many events per sweep
+GRID_STRATS = ("best", "sr", "ecmp")
+GRID_LOADS = (4.0, 6.0, 8.0, 12.0)
+GRID_SEEDS = tuple(range(12))
+GRID_JOBS = 400
+GRID_MAX_GPUS = 16
+
+
+def _cells():
+    out = []
+    for s in GRID_STRATS:
+        for seed in GRID_SEEDS:
+            for load in GRID_LOADS:
+                ws = WorkloadSpec(num_jobs=GRID_JOBS, mean_interarrival=load,
+                                  max_gpus=GRID_MAX_GPUS, seed=seed)
+                out.append((generate_trace(ws), s, seed))
+    return out
+
+
+def _serial_v2(cells):
+    reports = []
+    for jobs, s, seed in cells:
+        sim = ClusterSimulator(CLUSTER2048, strategy=get_strategy(s),
+                               seed=seed, engine="v2")
+        reports.append(sim.run(jobs))
+    return reports
+
+
+def run(fast: bool = True):
+    rows = []
+    repeats = 3 if fast else 5
+    cells = _cells()
+
+    # warm allocators / strategy caches on a small prefix (excluded)
+    run_lanes(CLUSTER2048, [(copy.deepcopy(j), get_strategy(s), seed)
+                            for j, s, seed in cells[:6]])
+    _serial_v2([(copy.deepcopy(j), s, seed) for j, s, seed in cells[:6]])
+
+    ratios = []
+    t_b_best = float("inf")
+    rep_v2 = rep_b = None
+    for _ in range(repeats):
+        # fresh job copies for both sides, prepared outside the timers
+        v2_cells = [(copy.deepcopy(j), s, seed) for j, s, seed in cells]
+        lanes = [(copy.deepcopy(j), get_strategy(s), seed)
+                 for j, s, seed in cells]
+        t0 = time.perf_counter()
+        rep_v2 = _serial_v2(v2_cells)
+        t_v2 = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        rep_b = run_lanes(CLUSTER2048, lanes)
+        t_b = time.perf_counter() - t0
+        ratios.append(t_v2 / t_b)
+        t_b_best = min(t_b_best, t_b)
+    ratios.sort()
+    med = ratios[len(ratios) // 2]
+    identical = all(
+        a.n_finished == b.n_finished
+        and np.array_equal(np.asarray(a.jcts), np.asarray(b.jcts))
+        and np.array_equal(np.asarray(a.jwts), np.asarray(b.jwts))
+        for a, b in zip(rep_v2, rep_b))
+    rows.append({
+        "name": "bench_batched[lane_engine]",
+        "us_per_call": round(t_b_best * 1e6, 1),
+        "derived": {"engine": "batched", "cells": len(cells),
+                    "jobs_per_cell": GRID_JOBS, "gpus": 2048,
+                    "strategies": list(GRID_STRATS),
+                    "repeats": repeats,
+                    "speedup_vs_serial_v2": round(med, 2),
+                    "speedups_all": [round(r, 2) for r in ratios],
+                    "identical_jct": identical,
+                    "meets_3x_on_64cell_grid":
+                        bool(med >= 3.0 and len(cells) >= 64)},
+    })
+
+    # -- (2) paper-scale report cell through the batched dispatch ----------
+    def report_paper():
+        from repro.core.figures import build_all
+        (table,) = build_all("paper", names=("jct-vs-load",),
+                             engine="batched")
+        return {"figure": table.name, "scale": "paper",
+                "engine": "batched", "rows": len(table.rows)}
+    rows.append(timed("bench_batched[report_paper]", report_paper))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from .common import emit
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="5 paired repeats instead of 3")
+    args = ap.parse_args()
+    emit(run(fast=not args.full))

@@ -18,8 +18,21 @@ import time
 import numpy as np
 
 from repro.core.fairshare import (autotune_crossover, maxmin_fair_jax,
-                                  maxmin_fair_numpy, phase_worst_jax,
-                                  phase_worst_numpy, problem_size)
+                                  maxmin_fair_numpy, phase_worst_accel,
+                                  phase_worst_jax, phase_worst_numpy,
+                                  problem_size)
+
+#: (nvals, nsegments) CSR shapes observed at :func:`phase_worst_loads`
+#: dispatch inside ``run_lanes`` on a fabric-heavy 72-lane campaign
+#: (CLUSTER512, 300 jobs/lane, max_gpus=64, best/sr/ecmp × 8 seeds ×
+#: 3 loads): the batched engine concatenates every affected job of every
+#: lane into one call, so these are far larger than the per-event v2
+#: shapes the old 4096-val probe modelled.
+BATCHED_DISPATCH_SHAPES = (
+    ("p50", 3345, 62),
+    ("p90", 22652, 398),
+    ("max", 43593, 753),
+)
 
 
 def _best_of(fn, *args, n: int = 3) -> float:
@@ -76,12 +89,49 @@ def run(fast: bool = True):
                         (nvals if t_jx < t_np else "inf")},
     })
 
+    # --- batched-engine dispatch shapes -------------------------------
+    # Re-measure the numpy↔accelerator crossover at the CSR sizes the
+    # lane-batched engine actually dispatches (cross-lane concatenation,
+    # see BATCHED_DISPATCH_SHAPES above) instead of the historical
+    # per-event probe.  The recorded crossover is whatever this box
+    # honestly measures — "inf" on hosts where the reduceat path wins at
+    # every real shape, which is the expected outcome on CPU-only builds.
+    pw_crossover: float | str = "inf"
+    shape_rows = {}
+    for tag, nvals, nseg in BATCHED_DISPATCH_SHAPES:
+        vals = rng.integers(1, 40, nvals).astype(np.int64)
+        ptr = np.sort(rng.integers(0, nvals, nseg - 1))
+        ptr = np.concatenate([[0], ptr, [nvals]]).astype(np.int64)
+        t_np = _best_of(phase_worst_numpy, vals, ptr)
+        t_ac = _best_of(phase_worst_accel, vals, ptr)
+        exact = bool((phase_worst_numpy(vals, ptr)
+                      == np.asarray(phase_worst_accel(vals, ptr))).all())
+        assert exact, f"phase_worst backends disagree at {tag} shape"
+        shape_rows[tag] = {"nvals": nvals, "nseg": nseg,
+                           "numpy_us": round(t_np * 1e6, 1),
+                           "accel_us": round(t_ac * 1e6, 1)}
+        if t_ac < t_np and pw_crossover == "inf":
+            pw_crossover = nvals
+    rows.append({
+        "name": "phase_worst[batched_dispatch]",
+        "us_per_call": min(r["numpy_us"] for r in shape_rows.values()),
+        "derived": {"shapes": shape_rows,
+                    "identical_int_output": True,
+                    # export REPRO_PHASE_WORST_CROSSOVER with this value to
+                    # move run_lanes' rate resolution onto the accelerator
+                    "recommended_crossover": pw_crossover},
+    })
+
     crossover = autotune_crossover()
     rows.append({
         "name": "maxmin_crossover[autotune]",
         "us_per_call": 0.0,
         "derived": {"crossover_dense_size":
-                    ("inf" if crossover == float("inf") else crossover)},
+                    ("inf" if crossover == float("inf") else crossover),
+                    # re-measured every recording (not a stale default):
+                    # autotune_crossover() probes numpy vs JAX afresh and
+                    # returns inf only when numpy wins at every probe size
+                    "measured_on_this_host": True},
     })
     return rows
 

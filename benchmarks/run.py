@@ -28,6 +28,7 @@ MODULES = [
     ("table6", "benchmarks.bench_table6_sched"),
     ("table7", "benchmarks.bench_table7_dist"),
     ("campaign", "benchmarks.bench_campaign"),
+    ("batched", "benchmarks.bench_batched"),
     ("scale", "benchmarks.bench_scale"),
     ("fairshare", "benchmarks.bench_fairshare"),
     ("report", "benchmarks.bench_report"),
@@ -37,7 +38,7 @@ MODULES = [
 #: rows whose ``derived`` payload is copied into the JSON summary
 SUMMARY_PREFIXES = ("campaign_engine", "campaign_churn", "scale_engine",
                     "scale_campaign_cell", "campaign_parallel",
-                    "report_suite")
+                    "report_suite", "bench_batched")
 
 
 def write_json(path: str, rows, failures: int, full: bool) -> None:

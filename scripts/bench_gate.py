@@ -10,7 +10,12 @@ and exits non-zero when:
      algorithm on the gated strategies (ecmp, sr), or
   2. any per-strategy ``identical_jct`` flag is false — the engines
      stopped producing bit-identical schedules, or
-  3. the parallel 2-worker cell stopped merging identically to serial.
+  3. the parallel 2-worker cell stopped merging identically to serial, or
+  4. a ``bench_batched[lane_engine]`` cell is present but its
+     ``meets_3x_on_64cell_grid`` flag is false — the lane-batched engine
+     lost its 3x median speedup over the serial v2 loop on the ≥64-cell
+     acceptance grid (older recordings without the cell are tolerated,
+     matching the report_suite pattern).
 
 Run: python scripts/bench_gate.py [PATH]   (or: make bench-gate)
 """
@@ -56,6 +61,14 @@ def main() -> int:
         if "orderings_ok" in row and not row["orderings_ok"]:
             errors.append(f"{name}: reproduced figures lost the paper's "
                           f"qualitative orderings")
+        # bench_batched cells gate only when present (PR 6+): the lane
+        # engine must keep its 3x-vs-serial-v2 acceptance margin
+        if "meets_3x_on_64cell_grid" in row \
+                and not row["meets_3x_on_64cell_grid"]:
+            errors.append(
+                f"{name}: lane-batched engine below 3x vs serial v2 "
+                f"(median: {row.get('speedup_vs_serial_v2')}x on "
+                f"{row.get('cells')} cells)")
 
     if errors:
         print("bench-gate: FAILED")

@@ -2,8 +2,8 @@
 """Documentation lint: keep README/docs honest against the code.
 
 Checks:
-  1. required docs exist (README, docs/{architecture,simulator,strategies,
-     events,reproduction,results}.md)
+  1. required docs exist (README, docs/{architecture,simulator,batched,
+     strategies,events,reproduction,results}.md)
   2. every `src/...` path mentioned in them exists on disk
   3. relative markdown links resolve
   4. the README strategy glossary covers every simulator strategy
@@ -24,8 +24,8 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 DOCS = ["README.md", "docs/architecture.md", "docs/simulator.md",
-        "docs/strategies.md", "docs/events.md", "docs/reproduction.md",
-        "docs/results.md"]
+        "docs/batched.md", "docs/strategies.md", "docs/events.md",
+        "docs/reproduction.md", "docs/results.md"]
 
 errors: list[str] = []
 

@@ -21,6 +21,7 @@ workload spec. CLI: ``python -m repro.launch.sweep campaign --help``.
 
 from __future__ import annotations
 
+import copy as _copy
 import dataclasses
 import json
 import time
@@ -294,7 +295,9 @@ def run_campaign(spec: ClusterSpec, grid: CampaignGrid,
     simulator's internal randomness (ECMP hashing, relaxed placement).
 
     ``engine`` — simulator engine per cell (``"v2"`` heap engine default,
-    ``"v1"`` scan engine); both produce bit-identical schedules.
+    ``"v1"`` scan engine, ``"batched"`` lane engine — serial campaigns
+    run all qualifying cells in lockstep, see docs/batched.md); all
+    produce bit-identical schedules.
 
     ``workers`` — when > 1, shard grid cells across a
     ``ProcessPoolExecutor``.  Results are merged in grid order regardless
@@ -396,8 +399,41 @@ def run_campaign(spec: ClusterSpec, grid: CampaignGrid,
                 rep, dt = fut.result()
                 record(strat, sched, load, seed, rep, dt)
     else:
-        for strat, sched, load, seed, cell_spec, tr, cfg in cells:
-            rep, dt = _run_cell(cell_spec, tr, cfg)
+        # serial campaigns under engine="batched" run every qualifying
+        # cell as one lane group in lockstep (grouped per cluster spec);
+        # non-qualifying cells fall through to per-cell simulate().  The
+        # group's wall time is split evenly across its cells, so
+        # sim_seconds stays comparable with per-cell engines.
+        done: Dict[int, Tuple[MetricsReport, float]] = {}
+        if config.engine == "batched":
+            from .batched import config_qualifies, run_lanes
+            groups: Dict[int, Tuple[ClusterSpec, List[int]]] = {}
+            for i, (_s, _q, _l, _sd, cell_spec, _tr, cfg) in \
+                    enumerate(cells):
+                if config_qualifies(cfg):
+                    groups.setdefault(id(cell_spec),
+                                      (cell_spec, []))[1].append(i)
+            for cell_spec, idxs in groups.values():
+                lanes_in = []
+                for i in idxs:
+                    _s, _q, _l, seed, _cs, tr, cfg = cells[i]
+                    lane_jobs = [_copy.copy(j) for j in tr]
+                    for j in lane_jobs:   # same reset as simulate()
+                        j.start_time = None
+                        j.finish_time = None
+                        j.remaining_iters = None
+                    lanes_in.append((lane_jobs, cfg.resolve_strategy(),
+                                     seed))
+                tg = time.time()
+                reps = run_lanes(cell_spec, lanes_in)
+                dt = (time.time() - tg) / len(idxs)
+                for i, rep in zip(idxs, reps):
+                    if cells[i][6].store == "stream":
+                        rep.condense()
+                    done[i] = (rep, dt)
+        for i, (strat, sched, load, seed, cell_spec, tr, cfg) in \
+                enumerate(cells):
+            rep, dt = done.get(i) or _run_cell(cell_spec, tr, cfg)
             record(strat, sched, load, seed, rep, dt)
     result.wall_time = time.time() - t0
     return result

@@ -23,9 +23,11 @@ from .events import ClusterEvent
 from .scheduler import QUEUE_POLICIES
 from .strategies import Strategy, get_strategy
 
-#: simulator engines — ``v1`` scan engine, ``v2`` heap engine (default);
-#: bit-identical schedules (see docs/simulator.md)
-ENGINES = ("v1", "v2")
+#: simulator engines — ``v1`` scan engine, ``v2`` heap engine (default),
+#: ``batched`` lane engine (flat-array lockstep runner, falls back to v2
+#: for non-qualifying configs); bit-identical schedules (see
+#: docs/simulator.md and docs/batched.md)
+ENGINES = ("v1", "v2", "batched")
 #: campaign per-cell sample stores — keep everything vs condense to
 #: bounded-size order statistics
 STORES = ("full", "stream")

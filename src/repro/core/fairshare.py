@@ -310,15 +310,47 @@ def phase_worst_crossover() -> float:
     return _pw_crossover["value"]
 
 
+_pallas_ok: Dict[str, bool] = {}
+
+
+def _phase_worst_pallas_ok() -> bool:
+    """Lazy one-shot probe of the Pallas segment-max kernel
+    (``repro.kernels.phase_max``) — import deferred so the numpy-only hot
+    path never pays for a jax import it does not use."""
+    if "value" not in _pallas_ok:
+        try:
+            from repro.kernels.phase_max import phase_max_available
+            _pallas_ok["value"] = phase_max_available()
+        except Exception:
+            _pallas_ok["value"] = False
+    return _pallas_ok["value"]
+
+
+def phase_worst_accel(vals: np.ndarray, ptr: np.ndarray) -> np.ndarray:
+    """Accelerator path of :func:`phase_worst_loads`: the Pallas kernel
+    when it lowers here, the jitted ``jax.ops.segment_max`` twin otherwise.
+    Integer-exact either way."""
+    if _phase_worst_pallas_ok():
+        from repro.kernels.phase_max import phase_worst_pallas
+        return phase_worst_pallas(vals, ptr)
+    return phase_worst_jax(vals, ptr)
+
+
 def phase_worst_loads(vals: np.ndarray, ptr: np.ndarray,
                       backend: str = "auto") -> np.ndarray:
-    """Batched per-phase bottleneck loads with numpy↔JAX size dispatch —
-    the contended-subgraph solve of the v2 engine's rate resolution.
-    Integer in/out, so the dispatch can never change a schedule."""
+    """Batched per-phase bottleneck loads with numpy↔accelerator size
+    dispatch — the contended-subgraph solve of the v2/batched engines' rate
+    resolution.  Integer in/out, so the dispatch can never change a
+    schedule.  ``backend``: ``"numpy"`` / ``"jax"`` / ``"pallas"`` force a
+    path (``"pallas"`` falls back to JAX segment-max when the kernel is
+    unavailable); ``"auto"`` uses numpy below the crossover and the
+    accelerator path above it."""
     if backend == "numpy":
         return phase_worst_numpy(vals, ptr)
     if backend == "jax":
         return phase_worst_jax(vals, ptr)
+    if backend == "pallas":
+        return phase_worst_accel(vals, ptr)
     if len(vals) < phase_worst_crossover():
         return phase_worst_numpy(vals, ptr)
-    return phase_worst_jax(vals, ptr)
+    return phase_worst_accel(vals, ptr)

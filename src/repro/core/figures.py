@@ -100,11 +100,13 @@ def _meta(**kv) -> Tuple[Tuple[str, object], ...]:
     return tuple(sorted(kv.items()))
 
 
-def _campaign_config(workers: Optional[int], store: str) -> SimConfig:
-    # engine v2 everywhere: the default engine is the contract the paper
-    # -scale streaming path (PR 2) is benchmarked on; v1 stays reachable
-    # through the sweep CLI for parity debugging
-    return SimConfig(engine="v2", workers=workers, store=store)
+def _campaign_config(workers: Optional[int], store: str,
+                     engine: Optional[str] = None) -> SimConfig:
+    # engine v2 by default: the default engine is the contract the paper
+    # -scale streaming path (PR 2) is benchmarked on; v1 (parity debugging)
+    # and batched (lockstep lane runs, docs/batched.md) are reachable via
+    # --engine on the sweep/report CLIs — all bit-identical schedules
+    return SimConfig(engine=engine or "v2", workers=workers, store=store)
 
 
 # ---------------------------------------------------------------------------
@@ -112,7 +114,8 @@ def _campaign_config(workers: Optional[int], store: str) -> SimConfig:
 # ---------------------------------------------------------------------------
 
 def _build_jct_vs_load(scale: str, workers: Optional[int] = None,
-                       progress: Progress = None) -> FigureTable:
+                       progress: Progress = None,
+                       engine: Optional[str] = None) -> FigureTable:
     """Strategy × load mean-JCT sweep (Fig. 12 / Table 5)."""
     p = {
         "smoke": dict(spec=CLUSTER512, ocs=None, jobs=60, loads=(200.0, 120.0),
@@ -128,7 +131,7 @@ def _build_jct_vs_load(scale: str, workers: Optional[int] = None,
         p["spec"], grid,
         workload=WorkloadSpec(num_jobs=p["jobs"], max_gpus=256, seed=0),
         ocs_spec=p["ocs"], progress=progress,
-        config=_campaign_config(workers, p["store"]))
+        config=_campaign_config(workers, p["store"], engine))
     cols = ("strategy", "load", "jct_mean", "jct_p99", "queue_delay_mean",
             "contention_ratio_mean", "n_finished")
     rows = tuple(
@@ -147,11 +150,12 @@ def _build_jct_vs_load(scale: str, workers: Optional[int] = None,
                  "inter-arrival gap λ shrinks.  Smaller load value = "
                  "heavier offered load."),
         meta=_meta(scale=scale, gpus=p["spec"].num_gpus, jobs=p["jobs"],
-                   loads=p["loads"], engine="v2", store=p["store"]))
+                   loads=p["loads"], engine=engine or "v2", store=p["store"]))
 
 
 def _build_contention_cdf(scale: str, workers: Optional[int] = None,
-                          progress: Progress = None) -> FigureTable:
+                          progress: Progress = None,
+                          engine: Optional[str] = None) -> FigureTable:
     """Per-job contention-ratio CDFs (§3 / §9.3, Fig. 13-style)."""
     p = {
         "smoke": dict(spec=CLUSTER512, jobs=60, load=120.0, max_gpus=256,
@@ -168,7 +172,8 @@ def _build_contention_cdf(scale: str, workers: Optional[int] = None,
         p["spec"], grid,
         workload=WorkloadSpec(num_jobs=p["jobs"], max_gpus=p["max_gpus"],
                               seed=0),
-        progress=progress, config=_campaign_config(workers, p["store"]))
+        progress=progress,
+        config=_campaign_config(workers, p["store"], engine))
     samples = {s: [v for c in res.cells if c.strategy == s
                    for v in c.report.slowdowns]
                for s in p["strategies"]}
@@ -184,11 +189,12 @@ def _build_contention_cdf(scale: str, workers: Optional[int] = None,
                  "jobs.  vClos sits at exactly 1.0 by construction; ECMP's "
                  "tail is the §3.1 hash-collision slowdown."),
         meta=_meta(scale=scale, gpus=p["spec"].num_gpus, jobs=p["jobs"],
-                   load=p["load"], engine="v2", store=p["store"]))
+                   load=p["load"], engine=engine or "v2", store=p["store"]))
 
 
 def _build_frag_timeline(scale: str, workers: Optional[int] = None,
-                         progress: Progress = None) -> FigureTable:
+                         progress: Progress = None,
+                         engine: Optional[str] = None) -> FigureTable:
     """Fragmentation index over time under churn: packed vs. scattered
     placement, with and without the migration-defragmentation pass.
 
@@ -216,7 +222,7 @@ def _build_frag_timeline(scale: str, workers: Optional[int] = None,
     extra: Dict[str, object] = {}
     for variant, strat in variants:
         rep = simulate(CLUSTER512, trace, config=SimConfig(
-            strategy=strat, events=events,
+            strategy=strat, events=events, engine=engine or "v2",
             defrag_interval=p["defrag"]))
         if progress is not None:
             progress(f"[frag-timeline] {variant}: migrations="
@@ -243,11 +249,13 @@ def _build_frag_timeline(scale: str, workers: Optional[int] = None,
                  "placement time, not repair, carries the effect."),
         meta=_meta(scale=scale, gpus=CLUSTER512.num_gpus, jobs=p["jobs"],
                    server_mtbf=p["mtbf"], preempt_fraction=p["preempt"],
-                   defrag_interval=p["defrag"], engine="v2", **extra))
+                   defrag_interval=p["defrag"], engine=engine or "v2",
+                   **extra))
 
 
 def _build_ocs_comparison(scale: str, workers: Optional[int] = None,
-                          progress: Progress = None) -> FigureTable:
+                          progress: Progress = None,
+                          engine: Optional[str] = None) -> FigureTable:
     """OCS-vClos vs. vClos vs. SR/ECMP under fragmentation pressure."""
     # smoke reuses the golden-trace workload (200 jobs, λ=120, seed 0 —
     # the ecmp=13417.8 / sr=3731.4 snapshot of tests/test_campaign.py), so
@@ -262,7 +270,7 @@ def _build_ocs_comparison(scale: str, workers: Optional[int] = None,
         CLUSTER512, grid,
         workload=WorkloadSpec(num_jobs=p["jobs"], max_gpus=256, seed=0),
         ocs_spec=CLUSTER512_OCS, progress=progress,
-        config=_campaign_config(workers, p["store"]))
+        config=_campaign_config(workers, p["store"], engine))
     cols = ("strategy", "jct_mean", "queue_delay_mean", "frag_gpu",
             "frag_network", "n_finished")
     rows = tuple(
@@ -279,7 +287,7 @@ def _build_ocs_comparison(scale: str, workers: Optional[int] = None,
                  "the OCS layer's rewiring of idle circuits exists to "
                  "relieve (paper §7, Table 5)." % p["load"]),
         meta=_meta(scale=scale, gpus=CLUSTER512.num_gpus, jobs=p["jobs"],
-                   load=p["load"], engine="v2", store=p["store"]))
+                   load=p["load"], engine=engine or "v2", store=p["store"]))
 
 
 #: the registry, in gallery order
@@ -304,7 +312,8 @@ def figure_names() -> Tuple[str, ...]:
 
 def build_figure(name: str, scale: str = "smoke",
                  workers: Optional[int] = None,
-                 progress: Progress = None) -> FigureTable:
+                 progress: Progress = None,
+                 engine: Optional[str] = None) -> FigureTable:
     """Build one registered figure at the given scale."""
     if scale not in SCALES:
         raise ValueError(f"unknown scale {scale!r}; choose from {SCALES}")
@@ -313,14 +322,17 @@ def build_figure(name: str, scale: str = "smoke",
     except KeyError:
         raise ValueError(f"unknown figure {name!r}; "
                          f"choose from {figure_names()}") from None
-    return spec.builder(scale, workers=workers, progress=progress)
+    return spec.builder(scale, workers=workers, progress=progress,
+                        engine=engine)
 
 
 def build_all(scale: str = "smoke", names: Optional[Tuple[str, ...]] = None,
               workers: Optional[int] = None,
-              progress: Progress = None) -> List[FigureTable]:
+              progress: Progress = None,
+              engine: Optional[str] = None) -> List[FigureTable]:
     """Build the figure suite in registry (gallery) order."""
-    return [build_figure(n, scale, workers=workers, progress=progress)
+    return [build_figure(n, scale, workers=workers, progress=progress,
+                         engine=engine)
             for n in (names if names is not None else figure_names())]
 
 

@@ -374,7 +374,7 @@ class ClusterSimulator:
         integer counts (the v2 engine's flat vector is the ground truth;
         the v1 engine densifies its Counter), so placements decided from
         this view are engine-independent."""
-        if self.engine == "v2":
+        if self.engine != "v1":
             view = self._load.view()
         else:
             view = np.zeros(self._ls.nlinks, dtype=np.int64)
@@ -391,7 +391,7 @@ class ClusterSimulator:
         hot path — no O(nlinks) densification); integer sums are order
         -independent, so both paths are exactly equal."""
         s = self.spec
-        if self.engine == "v2":
+        if self.engine != "v1":
             load, ls = self._load, self._ls
             up = load[:ls.half].reshape(s.num_leafs, -1).sum(axis=1)
             down = load[ls.half:].reshape(s.num_spines, s.num_leafs,
@@ -723,7 +723,7 @@ class ClusterSimulator:
         link→jobs index (identical contents by the parity contract)."""
         out: Set[int] = set()
         channels = self._ls.channels
-        if self.engine == "v2":
+        if self.engine != "v1":
             ids = [self._ls.id_of(("up", n, m, c)) for c in range(channels)]
             ids += [self._ls.id_of(("down", m, n, c))
                     for c in range(channels)]
@@ -1166,6 +1166,14 @@ class ClusterSimulator:
         jobs = sorted(jobs, key=lambda j: j.arrival)
         self.now = 0.0
         self._jobs_by_id = {j.job_id: j for j in jobs}
+        if self.engine == "batched":
+            # lane engine fast path; non-qualifying configs (events,
+            # defrag, non-fifo queues, plugin strategies/routings,
+            # max_time) fall through to the bit-identical v2 run below
+            from .batched import try_run_batched
+            rep = try_run_batched(self, list(jobs), max_time)
+            if rep is not None:
+                return rep
         if self.engine == "v1":
             self._ops = (self._remove_running, self._add_running,
                          self._try_schedule, self._recompute_rates)

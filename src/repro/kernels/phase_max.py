@@ -1,0 +1,120 @@
+"""Pallas segment-max kernel for the fair-share water-filling inner loop.
+
+The simulator's rate resolution reduces to per-phase bottleneck loads:
+``out[i] = max(vals[ptr[i]:ptr[i+1]])`` over a CSR layout (see
+``repro.core.fairshare.phase_worst_loads``).  The batched engine
+(``engine="batched"``, docs/batched.md) concatenates every affected job of
+every lane into one such call per simulated event round, which is exactly
+the dense, regular shape a TPU kernel wants.
+
+Layout: the ragged CSR is gathered into one ``(nseg_pad, K_pad)`` int32
+tile — row ``i`` holds segment ``i``'s values, padded with ``INT32_MIN`` so
+padding never wins a max.  The kernel runs a 2-D grid over (segment-block,
+column-block); the output block index ignores the column axis, so the
+sequential grid revisits each output row-block once per column-block and
+accumulates a running maximum (the standard Pallas reduction idiom: init
+under ``pl.when(j == 0)``, then ``out = max(out, block_max)``).
+
+On CPU the kernel runs in interpret mode (numerically identical, slow);
+``phase_max_available()`` probes lowering once so callers can fall back to
+the jitted ``jax.ops.segment_max`` path (``fairshare.phase_worst_jax``)
+where Pallas is unavailable.  All paths are integer-exact, so dispatch can
+never change a schedule.
+"""
+
+from __future__ import annotations
+
+from functools import lru_cache, partial
+
+import numpy as np
+
+try:
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+    _HAVE_PALLAS = True
+except Exception:  # pragma: no cover - jax is a baked-in dependency here
+    _HAVE_PALLAS = False
+
+_I32_MIN = -(2 ** 31)
+
+# segment-block × column-block tile; multiples of the (8, 128) int32 TPU
+# tile so non-divisible inputs only pad, never re-layout
+_BLOCK_S = 128
+_BLOCK_K = 128
+
+
+def _row_max_kernel(x_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, _I32_MIN)
+
+    o_ref[...] = jnp.maximum(o_ref[...],
+                             x_ref[...].max(axis=1, keepdims=True))
+
+
+@lru_cache(maxsize=64)
+def _row_max_call(nseg_pad: int, k_pad: int, interpret: bool):
+    """Compiled pallas_call for one padded shape (shapes recur across event
+    rounds, so the cache is small and hot)."""
+    grid = (nseg_pad // _BLOCK_S, k_pad // _BLOCK_K)
+    fn = pl.pallas_call(
+        _row_max_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((_BLOCK_S, _BLOCK_K), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((_BLOCK_S, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nseg_pad, 1), jnp.int32),
+        interpret=interpret,
+    )
+    return jax.jit(fn)
+
+
+def _pad_up(n: int, block: int) -> int:
+    return max(block, -(-n // block) * block)
+
+
+def phase_worst_pallas(vals: np.ndarray, ptr: np.ndarray,
+                       interpret: bool | None = None) -> np.ndarray:
+    """Pallas twin of ``fairshare.phase_worst_numpy`` (identical integer
+    output, including empty segments -> 0 and negative values)."""
+    nseg = len(ptr) - 1
+    out = np.zeros(nseg, dtype=np.int64)
+    if not len(vals) or nseg == 0:
+        return out
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    vals = np.asarray(vals)
+    ptr = np.asarray(ptr)
+    width = np.diff(ptr)
+    k_pad = _pad_up(int(width.max()), _BLOCK_K)
+    nseg_pad = _pad_up(nseg, _BLOCK_S)
+    # CSR -> dense row gather (host-side; the reduction is the kernel's job)
+    col = np.arange(k_pad)
+    valid = col[None, :] < width[:, None]
+    idx = np.where(valid, ptr[:-1, None] + col[None, :], 0)
+    dense = np.full((nseg_pad, k_pad), _I32_MIN, dtype=np.int32)
+    dense[:nseg] = np.where(valid, vals[idx], _I32_MIN)
+    res = np.asarray(_row_max_call(nseg_pad, k_pad, interpret)(dense))
+    res = res[:nseg, 0].astype(np.int64)
+    return np.where(width > 0, res, 0)
+
+
+def phase_max_available() -> bool:
+    """One-shot probe: can the kernel lower and agree with numpy here?
+    (interpret mode on CPU counts as available — it is exact, just slow)."""
+    if not _HAVE_PALLAS:
+        return False
+    if "ok" not in _state:
+        try:
+            vals = np.asarray([3, 1, 4, 1, 5], dtype=np.int64)
+            ptr = np.asarray([0, 2, 2, 5])
+            got = phase_worst_pallas(vals, ptr)
+            _state["ok"] = got.tolist() == [3, 0, 5]
+        except Exception:
+            _state["ok"] = False
+    return _state["ok"]
+
+
+_state: dict = {}

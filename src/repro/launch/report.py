@@ -259,19 +259,21 @@ def render_figure(table, path: Path) -> bool:
 # Generate / check
 # ---------------------------------------------------------------------------
 
-def _build(scale: str, names, workers, progress):
+def _build(scale: str, names, workers, progress, engine=None):
     from repro.core.figures import build_all
-    return build_all(scale, names=names, workers=workers, progress=progress)
+    return build_all(scale, names=names, workers=workers, progress=progress,
+                     engine=engine)
 
 
 def generate(scale: str = "smoke", out_dir: Optional[Path] = None,
              names=None, workers: Optional[int] = None,
-             render: bool = True, progress=print) -> Path:
+             render: bool = True, progress=print,
+             engine: Optional[str] = None) -> Path:
     """Build the suite and write gallery + CSVs (+ SVGs).  Returns the
     gallery path.  Smoke writes the committed ``docs/`` artifacts; paper
     defaults to ``reports/paper/``."""
     from repro.core.figures import qualitative_checks
-    tables = _build(scale, names, workers, progress)
+    tables = _build(scale, names, workers, progress, engine)
     problems = qualitative_checks(tables)
     if problems:
         raise SystemExit("[report] reproduced data lost the paper's "
@@ -340,6 +342,7 @@ def check_results(tables=None, workers: Optional[int] = None) -> List[str]:
 
 
 def main() -> None:
+    from repro.core.config import ENGINES
     from repro.core.figures import SCALES, figure_names
     from repro.launch.sweep import csv_arg            # shared CLI plumbing
     ap = argparse.ArgumentParser(
@@ -358,6 +361,11 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=None,
                     help="campaign cells across N processes "
                          "(bit-identical to serial)")
+    ap.add_argument("--engine", default=None, choices=ENGINES,
+                    help="simulator engine for the campaign cells "
+                         "(default v2; batched runs qualifying serial "
+                         "cells in lockstep — bit-identical schedules, "
+                         "see docs/batched.md)")
     ap.add_argument("--no-render", action="store_true",
                     help="skip matplotlib SVGs (data + gallery only)")
     ap.add_argument("--check", action="store_true",
@@ -387,7 +395,7 @@ def main() -> None:
         return
     generate(args.scale, Path(args.out_dir) if args.out_dir else None,
              names=args.figures, workers=args.workers,
-             render=not args.no_render)
+             render=not args.no_render, engine=args.engine)
 
 
 if __name__ == "__main__":

@@ -160,8 +160,11 @@ def campaign_main(argv) -> None:
     ap.add_argument("--full-recompute", action="store_true",
                     help="use the full-recompute rate engine (debug)")
     ap.add_argument("--engine", default="v2", choices=ENGINES,
-                    help="simulator engine: v2 heap engine (default) or the "
-                         "v1 scan engine — bit-identical schedules")
+                    help="simulator engine: v2 heap engine (default), the "
+                         "v1 scan engine, or the batched lane engine "
+                         "(serial campaigns advance qualifying cells in "
+                         "lockstep; docs/batched.md) — bit-identical "
+                         "schedules")
     ap.add_argument("--workers", type=int, default=None,
                     help="shard grid cells across N processes "
                          "(deterministic merge; default: serial)")

@@ -1,0 +1,210 @@
+"""Differential oracle suite for the lane-batched engine (docs/batched.md).
+
+The sequential v2 heap engine is the oracle: for every builtin strategy
+(plus the ``contention-affinity`` plugin), every queueing policy and ≥3
+seeds, ``engine="batched"`` must produce the *identical* schedule — same
+JCT/JWT/slowdown for every job, same fragmentation accounting.  Qualifying
+configs (best/sr/ecmp × fifo, no churn) exercise the lockstep lane engine;
+everything else exercises the delegation path (``try_run_batched`` returns
+None and the run falls through to the v2 loop), which must also be exact
+— so a silent delegation bug can't masquerade as engine parity.
+"""
+
+import copy
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.batched import config_qualifies, run_lanes, try_run_batched
+from repro.core.campaign import CampaignGrid, run_campaign
+from repro.core.config import SimConfig
+from repro.core.events import ClusterEvent
+from repro.core.metrics import MetricsReport
+from repro.core.simulator import ClusterSimulator
+from repro.core.strategies import get_strategy, registered_strategies
+from repro.core.topology import CLUSTER512, CLUSTER512_OCS, TESTBED32
+from repro.core.workloads import WorkloadSpec, generate_trace
+
+BUILTINS = ("best", "sr", "ecmp", "balanced", "vclos", "ocs-vclos",
+            "ocs-relax")
+FAST = ("best", "sr", "ecmp")          # lane-engine fast path
+PLUGIN = "contention-affinity"
+SEEDS = (0, 1, 2)
+
+
+def _trace(num_jobs, load, max_gpus, seed):
+    return generate_trace(WorkloadSpec(num_jobs=num_jobs,
+                                       mean_interarrival=load,
+                                       max_gpus=max_gpus, seed=seed))
+
+
+def _run(spec, strategy, scheduler, seed, jobs, engine):
+    sim = ClusterSimulator(spec, strategy=strategy, scheduler=scheduler,
+                           seed=seed, engine=engine)
+    rep = sim.run(copy.deepcopy(jobs))
+    return sim, rep
+
+
+def _assert_reports_equal(rb: MetricsReport, rv: MetricsReport):
+    """Bit-exact schedule equality, not approximate metric agreement."""
+    assert rb.n_finished == rv.n_finished
+    np.testing.assert_array_equal(np.asarray(rb.jcts), np.asarray(rv.jcts))
+    np.testing.assert_array_equal(np.asarray(rb.jwts), np.asarray(rv.jwts))
+    np.testing.assert_array_equal(np.asarray(rb.slowdowns),
+                                  np.asarray(rv.slowdowns))
+    assert rb.frag_gpu == rv.frag_gpu
+    assert rb.frag_network == rv.frag_network
+    assert rb.avg_jct == rv.avg_jct
+    assert rb.avg_jwt == rv.avg_jwt
+    assert rb.stability == rv.stability
+    assert rb.makespan == rv.makespan
+
+
+# ---------------------------------------------------------------------------
+# Dispatch predicate: which configs take the lane fast path
+# ---------------------------------------------------------------------------
+
+def test_config_qualifies_fast_strategies():
+    for s in FAST:
+        assert config_qualifies(SimConfig(engine="batched", strategy=s))
+
+
+@pytest.mark.parametrize("cfg", [
+    SimConfig(engine="batched", strategy="vclos"),
+    SimConfig(engine="batched", strategy="balanced"),
+    SimConfig(engine="batched", strategy=PLUGIN),
+    SimConfig(engine="batched", strategy="best", scheduler="ff"),
+    SimConfig(engine="batched", strategy="best", scheduler="edf"),
+    SimConfig(engine="batched", strategy="best", defrag_interval=30.0),
+    SimConfig(engine="batched", strategy="best", max_time=1000.0),
+    SimConfig(engine="batched", strategy="best",
+              events=(ClusterEvent(10.0, "server-fail", server=0),)),
+], ids=["vclos", "balanced", "plugin", "ff", "edf", "defrag", "max_time",
+        "events"])
+def test_config_does_not_qualify(cfg):
+    assert not config_qualifies(cfg)
+
+
+def test_try_run_batched_delegates_non_fifo():
+    jobs = _trace(40, 30.0, 16, 0)
+    sim = ClusterSimulator(TESTBED32, strategy="best", scheduler="ff",
+                           seed=0, engine="batched")
+    assert try_run_batched(sim, sorted(jobs, key=lambda j: j.arrival),
+                           math.inf) is None
+
+
+def test_try_run_batched_takes_qualifying():
+    jobs = _trace(40, 30.0, 16, 0)
+    sim = ClusterSimulator(TESTBED32, strategy="best", seed=0,
+                           engine="batched")
+    rep = try_run_batched(sim, sorted(jobs, key=lambda j: j.arrival),
+                          math.inf)
+    assert rep is not None and rep.n_finished == 40
+
+
+# ---------------------------------------------------------------------------
+# Single-cell parity: fast path (lane engine) and delegation path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("strategy", FAST)
+def test_parity_fast_path(strategy, seed):
+    jobs = _trace(100, 25.0, 16, seed)
+    _, rv = _run(TESTBED32, strategy, "fifo", seed, jobs, "v2")
+    simb, rb = _run(TESTBED32, strategy, "fifo", seed, jobs, "batched")
+    _assert_reports_equal(rb, rv)
+    # the dispatch really took the lane engine, not the v2 fallthrough
+    assert config_qualifies(simb.config)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("strategy", BUILTINS + (PLUGIN,))
+def test_parity_all_strategies(strategy, seed):
+    """Every builtin + the contention-affinity plugin: fast-path cells run
+    the lane engine, the rest exercise delegation — all must match v2."""
+    spec = CLUSTER512_OCS if get_strategy(strategy).requires_ocs \
+        else CLUSTER512
+    jobs = _trace(120, 40.0, 64, seed)
+    _, rv = _run(spec, strategy, "fifo", seed, jobs, "v2")
+    _, rb = _run(spec, strategy, "fifo", seed, jobs, "batched")
+    _assert_reports_equal(rb, rv)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("scheduler", ("fifo", "ff", "edf"))
+@pytest.mark.parametrize("strategy", ("best", "sr"))
+def test_parity_queue_policies(strategy, scheduler):
+    """Non-fifo queues delegate to v2 under engine="batched" — parity must
+    hold across every queueing policy either way."""
+    for seed in SEEDS:
+        jobs = _trace(80, 20.0, 16, seed)
+        _, rv = _run(TESTBED32, strategy, scheduler, seed, jobs, "v2")
+        _, rb = _run(TESTBED32, strategy, scheduler, seed, jobs, "batched")
+        _assert_reports_equal(rb, rv)
+
+
+def test_plugin_registry_covers_suite():
+    """The suite's strategy list tracks the registry: a newly-registered
+    builtin must be added to BUILTINS (or this fails loudly)."""
+    assert set(registered_strategies()) == set(BUILTINS) | {PLUGIN}
+
+
+# ---------------------------------------------------------------------------
+# Cross-lane lockstep: many cells in one run_lanes call vs per-cell v2
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_run_lanes_lockstep_exact():
+    """Heterogeneous lanes (different strategies, seeds, loads and trace
+    lengths) advanced in lockstep must each match their own serial v2 run
+    — the core differential guarantee of the batched engine."""
+    cells = [(s, seed, load, nj)
+             for s in FAST for seed in SEEDS
+             for load, nj in ((15.0, 90), (35.0, 60))]
+    lanes_in = []
+    for s, seed, load, nj in cells:
+        jobs = _trace(nj, load, 24, seed)
+        lanes_in.append((copy.deepcopy(jobs), get_strategy(s), seed))
+    reps = run_lanes(CLUSTER512, lanes_in)
+    assert len(reps) == len(cells)
+    for (s, seed, load, nj), rb in zip(cells, reps):
+        jobs = _trace(nj, load, 24, seed)
+        _, rv = _run(CLUSTER512, s, "fifo", seed, jobs, "v2")
+        _assert_reports_equal(rb, rv)
+
+
+def test_run_lanes_rejects_non_qualifying_routing():
+    jobs = _trace(10, 30.0, 8, 0)
+    with pytest.raises(ValueError, match="qualify"):
+        run_lanes(TESTBED32, [(jobs, get_strategy("vclos"), 0)])
+
+
+# ---------------------------------------------------------------------------
+# Campaign-level grouping: run_campaign(engine="batched") vs engine="v2"
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_campaign_batched_matches_v2():
+    """A mixed grid (fast-path + delegating strategies) through the
+    campaign driver: the batched engine's lane grouping must reproduce the
+    serial v2 campaign cell for cell."""
+    grid = CampaignGrid(strategies=("best", "sr", "vclos"),
+                        schedulers=("fifo",), loads=(20.0, 35.0),
+                        seeds=(0, 1))
+    wl = WorkloadSpec(num_jobs=60, max_gpus=16)
+    res_v = run_campaign(TESTBED32, grid, workload=wl, engine="v2")
+    res_b = run_campaign(TESTBED32, grid, workload=wl, engine="batched")
+    rows_v = res_v.aggregate()
+    rows_b = res_b.aggregate()
+    assert len(rows_v) == len(rows_b) == len(grid.strategies) * 2
+    for a, b in zip(rows_v, rows_b):
+        # sim_seconds is wall time — the only legitimately engine-dependent
+        # column; everything else must be bit-identical
+        assert {k: v for k, v in a.items() if k != "sim_seconds"} == \
+            {k: v for k, v in b.items() if k != "sim_seconds"}
+    for cv, cb in zip(res_v.cells, res_b.cells):
+        assert (cv.strategy, cv.scheduler, cv.load, cv.seed) == \
+            (cb.strategy, cb.scheduler, cb.load, cb.seed)
+        _assert_reports_equal(cb.report, cv.report)

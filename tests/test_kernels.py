@@ -5,9 +5,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip(
-    "hypothesis", reason="property tests need the optional `hypothesis` extra")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:         # property tests need the optional extra; the
+    HAVE_HYPOTHESIS = False  # example-based kernel tests below still run
 
 from repro.kernels.ops import attention, flash_attention, rwkv6_mix
 from repro.kernels.ref import attention_ref, rwkv6_ref
@@ -66,24 +68,26 @@ def test_flash_attention_grads_match_xla():
         np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-4)
 
 
-@settings(max_examples=15, deadline=None)
-@given(
-    s=st.sampled_from([64, 128, 192]),
-    hd=st.sampled_from([16, 32]),
-    hkv=st.sampled_from([1, 2, 4]),
-    g=st.sampled_from([1, 2, 4]),
-    blk=st.sampled_from([32, 64]),
-)
-def test_flash_attention_property(s, hd, hkv, g, blk):
-    rng = np.random.default_rng(s * hd + hkv)
-    hq = hkv * g
-    q = rand(rng, (1, s, hq, hd), jnp.float32)
-    k = rand(rng, (1, s, hkv, hd), jnp.float32)
-    v = rand(rng, (1, s, hkv, hd), jnp.float32)
-    ref = attention_ref(q, k, v, causal=True)
-    out = attention(q, k, v, implementation="pallas", block_q=blk,
-                    block_k=blk)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        s=st.sampled_from([64, 128, 192]),
+        hd=st.sampled_from([16, 32]),
+        hkv=st.sampled_from([1, 2, 4]),
+        g=st.sampled_from([1, 2, 4]),
+        blk=st.sampled_from([32, 64]),
+    )
+    def test_flash_attention_property(s, hd, hkv, g, blk):
+        rng = np.random.default_rng(s * hd + hkv)
+        hq = hkv * g
+        q = rand(rng, (1, s, hq, hd), jnp.float32)
+        k = rand(rng, (1, s, hkv, hd), jnp.float32)
+        v = rand(rng, (1, s, hkv, hd), jnp.float32)
+        ref = attention_ref(q, k, v, causal=True)
+        out = attention(q, k, v, implementation="pallas", block_q=blk,
+                        block_k=blk)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=3e-5)
 
 
 # ---------------------------------------------------------------------------
@@ -110,20 +114,120 @@ def test_rwkv_kernel_sweep(t, kdim, vdim, chunk, with_bonus):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-4)
 
 
-@settings(max_examples=10, deadline=None)
-@given(chunk=st.sampled_from([16, 32]),
-       decay_lo=st.floats(0.2, 0.9))
-def test_rwkv_kernel_property(chunk, decay_lo):
-    rng = np.random.default_rng(int(decay_lo * 1000))
-    b, h, t, kd = 1, 2, 64, 8
-    q = rand(rng, (b, h, t, kd), jnp.float32)
-    k = rand(rng, (b, h, t, kd), jnp.float32)
-    v = rand(rng, (b, h, t, kd), jnp.float32)
-    ld = jnp.asarray(np.log(rng.uniform(decay_lo, 1.0, (b, h, t, kd))),
-                     jnp.float32)
-    ref, _ = rwkv6_ref(q, k, v, ld)
-    out = rwkv6_mix(q, k, v, ld, chunk=chunk, implementation="pallas")
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-4)
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(chunk=st.sampled_from([16, 32]),
+           decay_lo=st.floats(0.2, 0.9))
+    def test_rwkv_kernel_property(chunk, decay_lo):
+        rng = np.random.default_rng(int(decay_lo * 1000))
+        b, h, t, kd = 1, 2, 64, 8
+        q = rand(rng, (b, h, t, kd), jnp.float32)
+        k = rand(rng, (b, h, t, kd), jnp.float32)
+        v = rand(rng, (b, h, t, kd), jnp.float32)
+        ld = jnp.asarray(np.log(rng.uniform(decay_lo, 1.0, (b, h, t, kd))),
+                         jnp.float32)
+        ref, _ = rwkv6_ref(q, k, v, ld)
+        out = rwkv6_mix(q, k, v, ld, chunk=chunk, implementation="pallas")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# phase-max segment kernel (batched simulator engine's water-filling inner
+# loop) vs the integer-exact numpy reference
+# ---------------------------------------------------------------------------
+
+from repro.core.fairshare import phase_worst_loads, phase_worst_numpy
+from repro.kernels.phase_max import phase_max_available, phase_worst_pallas
+
+needs_phase_max = pytest.mark.skipif(
+    not phase_max_available(),
+    reason="Pallas phase-max kernel does not lower here "
+           "(interpret mode on CPU counts as available)")
+
+
+def _csr(rng, nseg, max_width, lo=-50, hi=50):
+    widths = rng.integers(0, max_width + 1, size=nseg)
+    ptr = np.concatenate([[0], np.cumsum(widths)])
+    vals = rng.integers(lo, hi, size=int(ptr[-1]))
+    return vals.astype(np.int64), ptr.astype(np.int64)
+
+
+@needs_phase_max
+def test_phase_max_matches_numpy_mixed():
+    """Empty, single-entry and wide segments interleaved in one call."""
+    vals = np.asarray([3, 1, 4, 7, 7, -2, 9], dtype=np.int64)
+    ptr = np.asarray([0, 2, 2, 3, 5, 5, 7])
+    got = phase_worst_pallas(vals, ptr)
+    want = phase_worst_numpy(vals, ptr)
+    assert got.tolist() == want.tolist() == [3, 0, 4, 7, 0, 9]
+
+
+@needs_phase_max
+def test_phase_max_empty_links():
+    # all-empty segments (idle fabric): every output is 0, not INT32_MIN
+    ptr = np.zeros(9, dtype=np.int64)
+    got = phase_worst_pallas(np.asarray([], dtype=np.int64), ptr)
+    assert got.tolist() == [0] * 8
+    # zero segments
+    assert phase_worst_pallas(np.asarray([], dtype=np.int64),
+                              np.asarray([0])).tolist() == []
+
+
+@needs_phase_max
+def test_phase_max_single_job_links():
+    # width-1 segments: output is the value itself, negatives preserved
+    vals = np.asarray([5, -3, 0, 17], dtype=np.int64)
+    ptr = np.arange(5)
+    got = phase_worst_pallas(vals, ptr)
+    assert got.tolist() == [5, -3, 0, 17]
+
+
+@needs_phase_max
+def test_phase_max_ties():
+    # duplicate maxima within and across segments
+    vals = np.asarray([8, 8, 8, 2, 8, 8], dtype=np.int64)
+    ptr = np.asarray([0, 3, 6])
+    assert phase_worst_pallas(vals, ptr).tolist() == [8, 8]
+
+
+@needs_phase_max
+@pytest.mark.parametrize("nseg,max_width", [
+    (1, 1),        # single cell, far below one (128, 128) block
+    (127, 5),      # one row short of the segment block
+    (129, 3),      # one row past it: 2-block grid on the segment axis
+    (7, 130),      # widths spill past one column block: accumulation path
+    (200, 40),     # non-divisible on both axes
+])
+def test_phase_max_nondivisible_grid_shapes(nseg, max_width):
+    rng = np.random.default_rng(nseg * 1000 + max_width)
+    vals, ptr = _csr(rng, nseg, max_width)
+    got = phase_worst_pallas(vals, ptr)
+    np.testing.assert_array_equal(got, phase_worst_numpy(vals, ptr))
+    assert got.dtype == np.int64
+
+
+@needs_phase_max
+def test_phase_worst_loads_pallas_backend_dispatch():
+    """The engine-facing entry point routes backend="pallas" through the
+    kernel and stays integer-identical to the numpy path."""
+    rng = np.random.default_rng(0)
+    vals, ptr = _csr(rng, 60, 12, lo=0, hi=10 ** 6)
+    np.testing.assert_array_equal(
+        phase_worst_loads(vals, ptr, backend="pallas"),
+        phase_worst_loads(vals, ptr, backend="numpy"))
+
+
+if HAVE_HYPOTHESIS:
+    @needs_phase_max
+    @settings(max_examples=15, deadline=None)
+    @given(nseg=st.integers(1, 64), max_width=st.integers(0, 24),
+           seed=st.integers(0, 2 ** 16))
+    def test_phase_max_property(nseg, max_width, seed):
+        rng = np.random.default_rng(seed)
+        vals, ptr = _csr(rng, nseg, max_width)
+        np.testing.assert_array_equal(phase_worst_pallas(vals, ptr),
+                                      phase_worst_numpy(vals, ptr))
 
 
 def test_blocked_attention_long_context_offsets():

@@ -13,6 +13,10 @@ so any violation hypothesis finds shrinks to a minimal regression repro.
 import numpy as np
 import pytest
 
+# Unlike tests/test_kernels.py (where only the @given tests need hypothesis
+# and the example-based ones run regardless), every test in this module is a
+# hypothesis property, so the module-level gate is the honest scope: without
+# the optional extra there is nothing here to run.
 hypothesis = pytest.importorskip(
     "hypothesis", reason="property tests need the optional `hypothesis` extra")
 from hypothesis import given, settings, strategies as st
@@ -245,3 +249,38 @@ def test_engine_bit_parity_is_a_property(scenario, strategy):
     assert v1.slowdowns == v2.slowdowns
     assert v1.event_log == v2.event_log
     assert v1.frag_series == v2.frag_series
+
+
+@st.composite
+def quiet_trace(draw):
+    """A random small churn-free trace — the batched lane engine's
+    qualifying regime (fifo, no events, no defrag)."""
+    n = draw(st.integers(1, 10))
+    jobs = []
+    t = 0.0
+    for i in range(n):
+        t += draw(st.floats(0.0, 40.0, allow_nan=False,
+                            allow_infinity=False))
+        jobs.append(Job(i, draw(st.sampled_from(_EV_MODELS)),
+                        draw(st.sampled_from([1, 2, 4, 8, 16])), 32, t,
+                        draw(st.integers(1, 150))))
+    return jobs
+
+
+@settings(max_examples=40, deadline=None)
+@given(jobs=quiet_trace(),
+       strategy=st.sampled_from(("ecmp", "sr", "best")),
+       seed=st.integers(0, 3))
+def test_batched_engine_parity_is_a_property(jobs, strategy, seed):
+    """batched ≡ v2 on random small traces (docs/batched.md) — any lane
+    -engine divergence shrinks to a minimal job list.  The fast-path
+    strategies are the interesting case (the lane engine actually runs);
+    the suite in tests/test_batched.py covers the delegating rest."""
+    cfg = SimConfig(strategy=strategy, seed=seed)
+    vb = ClusterSimulator(SPEC, config=cfg,
+                          engine="batched").run(_fresh(jobs))
+    v2 = ClusterSimulator(SPEC, config=cfg, engine="v2").run(_fresh(jobs))
+    assert vb.n_finished == v2.n_finished == len(jobs)
+    assert vb.jcts == v2.jcts
+    assert vb.jwts == v2.jwts
+    assert vb.slowdowns == v2.slowdowns
