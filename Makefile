@@ -2,8 +2,9 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-fast test-batched bench-smoke bench bench-gate docs-lint \
-        docs-lint-fast check report report-smoke report-paper examples-smoke
+.PHONY: test test-fast test-batched test-chaos bench-smoke bench bench-gate \
+        docs-lint docs-lint-fast check report report-smoke report-paper \
+        examples-smoke
 
 test:            ## tier-1 verification (what CI gates on) — the full suite
 	$(PY) -m pytest -x -q
@@ -13,6 +14,9 @@ test-fast:       ## tier-1 minus @pytest.mark.slow parity sweeps (~fast inner lo
 
 test-batched:    ## lane-engine differential suite incl. slow parity sweeps (docs/batched.md)
 	$(PY) -m pytest -x -q tests/test_batched.py tests/test_kernels.py
+
+test-chaos:      ## fault-tolerant runtime: crash/hang/flaky recovery + bit-identical resume (docs/robustness.md)
+	$(PY) -m pytest -x -q tests/test_runtime.py
 
 bench-smoke:     ## ~60s campaign smoke: v2-vs-v1 speedup, JCT identity, parallel path
 	$(PY) -m benchmarks.bench_campaign
@@ -45,7 +49,7 @@ examples-smoke:  ## examples compile + their repro.* imports resolve + fast ones
 # check runs docs-lint with --no-results: report-smoke already rebuilds the
 # smoke figure suite and byte-compares the gallery, so the drift check runs
 # exactly once per check (standalone `make docs-lint` keeps the full set)
-check: docs-lint-fast bench-gate examples-smoke report-smoke test-fast test-batched   ## lint + perf gate + fast tests (full tier-1: make test)
+check: docs-lint-fast bench-gate examples-smoke report-smoke test-fast test-batched test-chaos   ## lint + perf gate + fast tests (full tier-1: make test)
 
 docs-lint-fast:
 	$(PY) scripts/docs_lint.py --no-results

@@ -16,6 +16,10 @@
 (3) Parallel-path smoke: a tiny 2-worker v2 campaign must merge
     bit-identically to the serial run (guards the ProcessPoolExecutor
     sharding in ``make bench-smoke``).
+(4) Journal overhead + resume identity: on a 144-cell grid the cell
+    journal (``repro.core.runtime.CellJournal``) must cost ≤5% of
+    campaign wall time, and resuming a completed journal must reproduce
+    the fresh run bit-identically (the PR 7 fault-tolerance gates).
 
   PYTHONPATH=src python -m benchmarks.bench_campaign [--full]
 """
@@ -23,6 +27,8 @@
 from __future__ import annotations
 
 import dataclasses
+import os
+import tempfile
 import time
 
 from repro.core import (CLUSTER512, CampaignGrid, SimConfig, WorkloadSpec,
@@ -168,6 +174,57 @@ def run(fast: bool = True):
                    for a, b in zip(ser.cells, par.cells))
         return {"workers": 2, "identical_to_serial": same}
     rows.append(timed("campaign_parallel[2workers]", parallel_cell))
+
+    # -- (4) journal overhead + resume identity (fault-tolerant runtime) ----
+    # the PR 7 acceptance cell: on a 144-cell grid, journaling every
+    # completed cell must cost ≤5% of campaign wall time, and resuming a
+    # complete journal must reproduce the fresh run's reports
+    # bit-identically.  Overhead comes from the journal's own in-run
+    # accounting (CellJournal.io_seconds: serialise + write + flush per
+    # record) over the same run's wall clock — differencing two separate
+    # end-to-end timings would put a ±20% machine-noise floor under a 5%
+    # gate.  The paired wall ratio is reported alongside, ungated.
+    resume_grid = CampaignGrid(strategies=("best", "vclos", "sr", "ecmp"),
+                               loads=(200.0, 120.0, 80.0),
+                               seeds=tuple(range(12)))       # 144 cells
+    cell_wl = WorkloadSpec(num_jobs=24, max_gpus=64, seed=0)
+    jrepeats = 3 if fast else 5
+    overheads, ratios, t_plain_best = [], [], float("inf")
+    tdir = tempfile.mkdtemp(prefix="bench-journal-")
+    jp = plain = None
+    for k in range(jrepeats):
+        t0 = time.time()
+        plain = run_campaign(CLUSTER512, resume_grid, workload=cell_wl)
+        t_plain = time.time() - t0
+        jp = os.path.join(tdir, f"j{k}.jsonl")
+        t0 = time.time()
+        jres = run_campaign(CLUSTER512, resume_grid, workload=cell_wl,
+                            journal=jp)
+        t_j = time.time() - t0
+        overheads.append(jres.journal_seconds
+                         / max(t_j - jres.journal_seconds, 1e-9))
+        ratios.append(t_j / t_plain)
+        t_plain_best = min(t_plain_best, t_plain)
+    ratios.sort()
+    overhead_pct = min(overheads) * 100.0
+    resumed = run_campaign(CLUSTER512, resume_grid, workload=cell_wl,
+                           resume=jp)
+    resume_identical = (
+        resumed.resumed_cells == resume_grid.size
+        and all(a.report == b.report
+                for a, b in zip(plain.cells, resumed.cells)))
+    rows.append({
+        "name": "campaign_resume[overhead]",
+        "us_per_call": round(t_plain_best * 1e6, 1),
+        "derived": {"cells": resume_grid.size,
+                    "jobs_per_cell": cell_wl.num_jobs,
+                    "repeats": jrepeats,
+                    "journal_overhead_pct": round(overhead_pct, 2),
+                    "wall_ratio_median":
+                        round(ratios[len(ratios) // 2], 3),
+                    "journal_overhead_le_5pct": bool(overhead_pct <= 5.0),
+                    "resume_identical": bool(resume_identical)},
+    })
     return rows
 
 

@@ -36,21 +36,24 @@ MODULES = [
 ]
 
 #: rows whose ``derived`` payload is copied into the JSON summary
-SUMMARY_PREFIXES = ("campaign_engine", "campaign_churn", "scale_engine",
-                    "scale_campaign_cell", "campaign_parallel",
-                    "report_suite", "bench_batched")
+SUMMARY_PREFIXES = ("campaign_engine", "campaign_churn", "campaign_resume",
+                    "scale_engine", "scale_campaign_cell",
+                    "campaign_parallel", "report_suite", "bench_batched")
 
 
 def write_json(path: str, rows, failures: int, full: bool) -> None:
     summary = {r["name"]: r["derived"] for r in rows
                if r["name"].startswith(SUMMARY_PREFIXES)
                and not isinstance(r["derived"], str)}
-    with open(path, "w") as f:
-        json.dump({"harness": "benchmarks.run",
-                   "mode": "full" if full else "fast",
-                   "failures": failures,
-                   "engine_summary": summary,
-                   "rows": rows}, f, indent=1, sort_keys=True)
+    payload = json.dumps({"harness": "benchmarks.run",
+                          "mode": "full" if full else "fast",
+                          "failures": failures,
+                          "engine_summary": summary,
+                          "rows": rows}, indent=1, sort_keys=True)
+    # atomic: a crash mid-write must not leave a torn BENCH_campaign.json
+    # for bench_gate to choke on
+    from repro.core.runtime import atomic_write_text
+    atomic_write_text(path, payload)
     print(f"[bench] json -> {path}", file=sys.stderr)
 
 

@@ -15,7 +15,11 @@ and exits non-zero when:
      ``meets_3x_on_64cell_grid`` flag is false — the lane-batched engine
      lost its 3x median speedup over the serial v2 loop on the ≥64-cell
      acceptance grid (older recordings without the cell are tolerated,
-     matching the report_suite pattern).
+     matching the report_suite pattern), or
+  5. a ``campaign_resume[overhead]`` cell is present but the cell
+     journal's overhead exceeded 5% of campaign wall time, or resuming a
+     completed journal stopped reproducing the fresh run bit-identically
+     (the PR 7 fault-tolerance gates; older recordings tolerated).
 
 Run: python scripts/bench_gate.py [PATH]   (or: make bench-gate)
 """
@@ -69,6 +73,18 @@ def main() -> int:
                 f"{name}: lane-batched engine below 3x vs serial v2 "
                 f"(median: {row.get('speedup_vs_serial_v2')}x on "
                 f"{row.get('cells')} cells)")
+        # campaign_resume cells gate only when present (PR 7+): the cell
+        # journal must stay cheap and resume must stay bit-identical
+        if "journal_overhead_le_5pct" in row \
+                and not row["journal_overhead_le_5pct"]:
+            errors.append(
+                f"{name}: cell journal overhead above 5% of campaign "
+                f"wall time ({row.get('journal_overhead_pct')}% on "
+                f"{row.get('cells')} cells)")
+        if "resume_identical" in row and not row["resume_identical"]:
+            errors.append(
+                f"{name}: resuming a completed journal no longer "
+                f"reproduces the fresh run bit-identically")
 
     if errors:
         print("bench-gate: FAILED")

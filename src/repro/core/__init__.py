@@ -14,6 +14,7 @@ Layers:
   jobs       — DML workload profiles + dataset generators
   workloads  — reproducible Poisson/CSV arrival traces for campaigns
   simulator  — event-driven flow-level cluster simulator (incremental rates)
+  runtime    — fault-tolerant cell execution: retries, timeouts, journal
   campaign   — strategy × policy × load × seed sweep driver + aggregation
   figures    — paper-figure experiment specs (smoke/paper scales, tabular)
   scheduler  — online scheduler facade for the training launcher
@@ -49,6 +50,10 @@ from .strategies import (Strategy, get_strategy, register_strategy,
                          registered_strategies, strategy_names,
                          unregister_strategy)
 from .config import ENGINES, STORES, SimConfig
+from .runtime import (CampaignError, CellJournal, CellOutcome, CellRunner,
+                      FailedCell, JournalMismatch, atomic_write_bytes,
+                      atomic_write_text, backoff_delay, classify_exception,
+                      trace_fingerprint)
 from .simulator import STRATEGIES, ClusterSimulator, simulate
 from .campaign import (AGGREGATE_COLUMNS, CampaignGrid, CampaignResult,
                        CellResult, run_campaign)

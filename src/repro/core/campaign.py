@@ -24,6 +24,7 @@ from __future__ import annotations
 import copy as _copy
 import dataclasses
 import json
+import os
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -33,6 +34,8 @@ import numpy as np
 from .config import SimConfig
 from .jobs import Job
 from .metrics import MetricsReport, cdf
+from .runtime import (CampaignCell, CellJournal, CellOutcome, CellRunner,
+                      FailedCell, atomic_write_text, journal_schema)
 from .simulator import simulate
 from .scheduler import QUEUE_POLICIES
 from .strategies import get_strategy
@@ -116,6 +119,29 @@ class CampaignResult:
     # one stats entry per simulated trace, keyed "load=<λ>,seed=<s>"
     trace_info: Dict[str, Dict[str, float]] = field(default_factory=dict)
     wall_time: float = 0.0
+    # fault accounting (repro.core.runtime): cells quarantined after
+    # exhausting retries, and how many cells were loaded from a resume
+    # journal instead of simulated
+    failed_cells: List[FailedCell] = field(default_factory=list)
+    resumed_cells: int = 0
+    # wall seconds the journal spent serialising + flushing cell records
+    # (0.0 when the campaign ran without one) — the bench overhead gate
+    # reads this instead of differencing two noisy end-to-end timings
+    journal_seconds: float = 0.0
+
+    # -- completeness -------------------------------------------------------
+    def missing_cells(self) -> List[Tuple[str, str, float, int]]:
+        """Grid cells with no result — quarantined or never run.  Partial
+        consumers (figures, reports) must surface these, not paper over
+        them (docs/robustness.md)."""
+        have = {(c.strategy, c.scheduler, c.load, c.seed)
+                for c in self.cells}
+        return [k for k in self.grid.cells() if k not in have]
+
+    @property
+    def complete(self) -> bool:
+        """True when every grid cell has a result."""
+        return not self.missing_cells()
 
     # -- aggregation --------------------------------------------------------
     def aggregate(self) -> List[Dict[str, float]]:
@@ -228,13 +254,16 @@ class CampaignResult:
 
     def write_csv(self, path: str,
                   columns: Optional[Sequence[str]] = None) -> None:
-        """Write the aggregate table as CSV in stable column order."""
+        """Write the aggregate table as CSV in stable column order
+        (atomically: a crash mid-write never leaves a truncated file)."""
         import csv as _csv
+        import io as _io
         cols, rows = self.to_table(columns)
-        with open(path, "w", newline="") as f:
-            w = _csv.writer(f)
-            w.writerow(cols)
-            w.writerows(rows)
+        buf = _io.StringIO()
+        w = _csv.writer(buf)
+        w.writerow(cols)
+        w.writerows(rows)
+        atomic_write_text(path, buf.getvalue())
 
     # -- serialisation ------------------------------------------------------
     def to_json(self) -> Dict:
@@ -250,21 +279,33 @@ class CampaignResult:
             "contention_cdfs": {s: self.contention_cdf(s)
                                 for s in self.grid.strategies},
             "jct_cdfs": {s: self.jct_cdf(s) for s in self.grid.strategies},
+            "failed_cells": [dataclasses.asdict(f)
+                             for f in self.failed_cells],
+            "missing_cells": [list(k) for k in self.missing_cells()],
+            "resumed_cells": self.resumed_cells,
         }
 
     def save(self, path: str) -> None:
-        with open(path, "w") as f:
-            json.dump(self.to_json(), f, indent=1, sort_keys=True)
+        atomic_write_text(path, json.dumps(self.to_json(), indent=1,
+                                           sort_keys=True))
 
 
-def _run_cell(spec: ClusterSpec, trace: List[Job],
-              config: SimConfig) -> Tuple[MetricsReport, float]:
+def _run_cell(spec: ClusterSpec, trace: List[Job], config: SimConfig,
+              cell_index: int = -1, attempt: int = 0,
+              ) -> Tuple[MetricsReport, float]:
     """One grid cell — top-level so ``ProcessPoolExecutor`` can pickle it.
     ``config`` is already cell-resolved in the parent: the strategy
     travels by registry name (never as an instance, which might not
     pickle) and is re-resolved against the registry inside the worker.
     Streaming cells condense inside the worker, so only O(max_samples)
-    floats cross the process boundary (and stay resident in the parent)."""
+    floats cross the process boundary (and stay resident in the parent).
+
+    ``cell_index``/``attempt`` identify the call for the deterministic
+    fault-injection harness (:mod:`repro.testing.chaos`) — inert (one env
+    lookup) unless ``REPRO_CHAOS`` is set."""
+    if os.environ.get("REPRO_CHAOS"):
+        from repro.testing.chaos import chaos_hook
+        chaos_hook(cell_index, attempt)
     t0 = time.time()
     rep = simulate(spec, trace, config=config)
     dt = time.time() - t0
@@ -284,6 +325,11 @@ def run_campaign(spec: ClusterSpec, grid: CampaignGrid,
                  ocs_spec: Optional[ClusterSpec] = None,
                  progress: Optional[Callable[[str], None]] = None,
                  config: Optional[SimConfig] = None,
+                 cell_timeout: Optional[float] = None,
+                 max_retries: Optional[int] = None,
+                 quarantine: Optional[bool] = None,
+                 journal: Optional[str] = None,
+                 resume: Optional[str] = None,
                  ) -> CampaignResult:
     """Sweep every grid cell over a shared trace and aggregate the metrics.
 
@@ -319,10 +365,31 @@ def run_campaign(spec: ClusterSpec, grid: CampaignGrid,
     (its per-cell fields — strategy, scheduler, seed — are overridden by
     the grid).  Loose kwargs explicitly passed alongside it override the
     matching config fields; omitted ones keep the config's values.
+
+    ``cell_timeout`` / ``max_retries`` / ``quarantine`` — fault policy
+    (see :class:`repro.core.config.SimConfig` and
+    :mod:`repro.core.runtime`).  A ``cell_timeout > 0`` forces pool
+    execution even at ``workers=1`` (a hung in-process cell cannot be
+    killed).
+
+    ``journal`` — path to write an append-only cell journal: every
+    completed cell is persisted the moment it finishes, so a crashed or
+    interrupted campaign loses at most the in-flight cells.  ``resume`` —
+    path of an existing journal to continue: journaled cells are loaded
+    instead of re-simulated (after a schema check that the journal
+    matches this campaign's grid/cluster/traces/config) and new
+    completions keep appending to it.  The merged result is
+    **bit-identical** to an uninterrupted run (``tests/test_runtime.py``).
     """
     config = (config or SimConfig()).with_overrides(
         incremental=incremental, engine=engine, workers=workers,
-        store=store, ilp_time_limit=ilp_time_limit)
+        store=store, ilp_time_limit=ilp_time_limit,
+        cell_timeout=cell_timeout, max_retries=max_retries,
+        quarantine=quarantine)
+    if journal is not None and resume is not None and journal != resume:
+        raise ValueError(
+            "pass either journal= (start a fresh journal) or resume= "
+            "(continue an existing one), not two different paths")
     if trace is not None and len(grid.loads) > 1:
         raise ValueError("an explicit trace fixes the arrival process; "
                          "use a single-entry loads axis")
@@ -352,8 +419,7 @@ def run_campaign(spec: ClusterSpec, grid: CampaignGrid,
     t0 = time.time()
     traces: Dict[Tuple[float, int], List[Job]] = {}
     events: Dict[Tuple[float, int], tuple] = {}
-    cells: List[Tuple[str, str, float, int, ClusterSpec, List[Job],
-                      SimConfig]] = []
+    cells: List[CampaignCell] = []
     for strat, sched, load, seed in grid.cells():
         tkey = (load, seed)
         if tkey not in traces:
@@ -378,62 +444,91 @@ def run_campaign(spec: ClusterSpec, grid: CampaignGrid,
         cell_cfg = dataclasses.replace(config, strategy=strat,
                                        scheduler=sched, seed=seed,
                                        events=events[tkey])
-        cells.append((strat, sched, load, seed, cell_spec, traces[tkey],
-                      cell_cfg))
+        cells.append(CampaignCell(strat, sched, load, seed, cell_spec,
+                                  traces[tkey], cell_cfg))
 
-    def record(strat, sched, load, seed, rep, dt):
-        result.cells.append(CellResult(strat, sched, load, seed, rep, dt))
-        if progress is not None:
-            progress(f"[campaign] {strat}/{sched} λ={load:g} seed={seed}: "
-                     f"JCT {rep.avg_jct:.1f}s (n={rep.n_finished}) "
-                     f"in {dt:.2f}s")
+    # -- journal / resume ---------------------------------------------------
+    schema = journal_schema(spec, ocs_spec, grid, config, cells)
+    jr: Optional[CellJournal] = None
+    outcomes: Dict[int, CellOutcome] = {}
+    if resume is not None:
+        jr, loaded = CellJournal.resume(resume, schema)
+        for i, cell in enumerate(cells):
+            hit = loaded.get(cell.key())
+            if hit is not None:
+                rep, dt = hit
+                outcomes[i] = CellOutcome(rep, dt, attempts=0, resumed=True)
+        if progress is not None and outcomes:
+            progress(f"[campaign] resumed {len(outcomes)}/{len(cells)} "
+                     f"cells from {resume}")
+    elif journal is not None:
+        jr = CellJournal.create(journal, schema)
+    pending = [i for i in range(len(cells)) if i not in outcomes]
 
-    if config.workers and config.workers > 1:
-        from concurrent.futures import ProcessPoolExecutor
-        with ProcessPoolExecutor(max_workers=config.workers) as pool:
-            futs = [pool.submit(_run_cell, cell_spec, tr, cfg)
-                    for *_cell, cell_spec, tr, cfg in cells]
-            # merge in submission (= grid) order: deterministic regardless
-            # of which worker finishes first
-            for (strat, sched, load, seed, *_), fut in zip(cells, futs):
-                rep, dt = fut.result()
-                record(strat, sched, load, seed, rep, dt)
-    else:
-        # serial campaigns under engine="batched" run every qualifying
-        # cell as one lane group in lockstep (grouped per cluster spec);
-        # non-qualifying cells fall through to per-cell simulate().  The
-        # group's wall time is split evenly across its cells, so
-        # sim_seconds stays comparable with per-cell engines.
-        done: Dict[int, Tuple[MetricsReport, float]] = {}
-        if config.engine == "batched":
-            from .batched import config_qualifies, run_lanes
-            groups: Dict[int, Tuple[ClusterSpec, List[int]]] = {}
-            for i, (_s, _q, _l, _sd, cell_spec, _tr, cfg) in \
-                    enumerate(cells):
-                if config_qualifies(cfg):
-                    groups.setdefault(id(cell_spec),
-                                      (cell_spec, []))[1].append(i)
-            for cell_spec, idxs in groups.values():
-                lanes_in = []
-                for i in idxs:
-                    _s, _q, _l, seed, _cs, tr, cfg = cells[i]
-                    lane_jobs = [_copy.copy(j) for j in tr]
-                    for j in lane_jobs:   # same reset as simulate()
-                        j.start_time = None
-                        j.finish_time = None
-                        j.remaining_iters = None
-                    lanes_in.append((lane_jobs, cfg.resolve_strategy(),
-                                     seed))
-                tg = time.time()
-                reps = run_lanes(cell_spec, lanes_in)
-                dt = (time.time() - tg) / len(idxs)
-                for i, rep in zip(idxs, reps):
-                    if cells[i][6].store == "stream":
-                        rep.condense()
-                    done[i] = (rep, dt)
-        for i, (strat, sched, load, seed, cell_spec, tr, cfg) in \
-                enumerate(cells):
-            rep, dt = done.get(i) or _run_cell(cell_spec, tr, cfg)
-            record(strat, sched, load, seed, rep, dt)
+    runner = CellRunner(cells, config, run_cell=_run_cell, journal=jr,
+                        progress=progress)
+    failed: Dict[int, FailedCell] = {}
+    try:
+        # pool execution when sharding across workers, and whenever a
+        # cell_timeout is set (a hung in-process cell cannot be killed)
+        if (config.workers and config.workers > 1) \
+                or config.cell_timeout > 0:
+            res, fl = runner.run_pool(pending)
+        else:
+            # serial campaigns under engine="batched" run every qualifying
+            # pending cell as one lane group in lockstep (grouped per
+            # cluster spec); non-qualifying cells fall through to per-cell
+            # simulate().  The group's wall time is split evenly across
+            # its cells, so sim_seconds stays comparable with per-cell
+            # engines.
+            done: Dict[int, CellOutcome] = {}
+            if config.engine == "batched":
+                from .batched import config_qualifies, run_lanes
+                groups: Dict[int, Tuple[ClusterSpec, List[int]]] = {}
+                for i in pending:
+                    if config_qualifies(cells[i].config):
+                        groups.setdefault(id(cells[i].spec),
+                                          (cells[i].spec, []))[1].append(i)
+                for cell_spec, idxs in groups.values():
+                    lanes_in = []
+                    for i in idxs:
+                        cell = cells[i]
+                        lane_jobs = [_copy.copy(j) for j in cell.trace]
+                        for j in lane_jobs:   # same reset as simulate()
+                            j.start_time = None
+                            j.finish_time = None
+                            j.remaining_iters = None
+                        lanes_in.append((lane_jobs,
+                                         cell.config.resolve_strategy(),
+                                         cell.seed))
+                    tg = time.time()
+                    reps = run_lanes(cell_spec, lanes_in)
+                    dt = (time.time() - tg) / len(idxs)
+                    for i, rep in zip(idxs, reps):
+                        if cells[i].config.store == "stream":
+                            rep.condense()
+                        runner._complete(i, rep, dt, 1, done)
+            res, fl = runner.run_serial([i for i in pending
+                                         if i not in done])
+            res.update(done)
+        outcomes.update(res)
+        failed.update(fl)
+    finally:
+        if jr is not None:
+            result.journal_seconds = jr.io_seconds
+            jr.close()
+
+    # merge in grid order: deterministic regardless of completion order,
+    # worker count, or how many cells came from the journal
+    for i, cell in enumerate(cells):
+        out = outcomes.get(i)
+        if out is None:
+            continue        # quarantined — accounted in failed_cells
+        result.cells.append(CellResult(cell.strategy, cell.scheduler,
+                                       cell.load, cell.seed, out.report,
+                                       out.wall_time))
+        if out.resumed:
+            result.resumed_cells += 1
+    result.failed_cells = [failed[i] for i in sorted(failed)]
     result.wall_time = time.time() - t0
     return result

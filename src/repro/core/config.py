@@ -61,6 +61,17 @@ class SimConfig:
     # campaign-only knobs
     workers: Optional[int] = None
     store: str = "full"
+    # fault-policy knobs (repro.core.runtime): per-cell wall-clock timeout
+    # in seconds (0 disables; > 0 requires pool execution, so it forces the
+    # worker-pool path even at workers=1), extra attempts granted to
+    # retryable failures (crash / timeout / transient exception), base of
+    # the exponential retry backoff in seconds, and whether permanently
+    # failed cells are quarantined into CampaignResult.failed_cells instead
+    # of aborting the campaign with CampaignError
+    cell_timeout: float = 0.0
+    max_retries: int = 2
+    retry_backoff: float = 0.05
+    quarantine: bool = False
 
     def __post_init__(self) -> None:
         get_strategy(self.strategy)   # raises listing registered names
@@ -81,6 +92,16 @@ class SimConfig:
             raise ValueError("defrag_interval must be >= 0 (0 disables)")
         if self.migration_iters < 0:
             raise ValueError("migration_iters must be >= 0")
+        if self.cell_timeout < 0:
+            raise ValueError("cell_timeout must be >= 0 (0 disables; "
+                             "> 0 runs cells under a worker pool so hung "
+                             "cells can be killed)")
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0 (0 means one "
+                             "attempt, no retries)")
+        if self.retry_backoff < 0:
+            raise ValueError("retry_backoff must be >= 0 (0 retries "
+                             "immediately)")
 
     def resolve_strategy(self) -> Strategy:
         """The registry instance behind :attr:`strategy`."""

@@ -31,10 +31,11 @@ CLI: ``python -m repro.launch.report --scale {smoke,paper}``.
 
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
-from .campaign import CampaignGrid, run_campaign
+from .campaign import CampaignGrid, CampaignResult, run_campaign
 from .config import SimConfig
 from .metrics import cdf_table
 from .simulator import simulate
@@ -101,12 +102,36 @@ def _meta(**kv) -> Tuple[Tuple[str, object], ...]:
 
 
 def _campaign_config(workers: Optional[int], store: str,
-                     engine: Optional[str] = None) -> SimConfig:
+                     engine: Optional[str] = None,
+                     fault: Optional[Dict] = None) -> SimConfig:
     # engine v2 by default: the default engine is the contract the paper
     # -scale streaming path (PR 2) is benchmarked on; v1 (parity debugging)
     # and batched (lockstep lane runs, docs/batched.md) are reachable via
     # --engine on the sweep/report CLIs — all bit-identical schedules
-    return SimConfig(engine=engine or "v2", workers=workers, store=store)
+    return SimConfig(engine=engine or "v2", workers=workers, store=store,
+                     **(fault or {}))
+
+
+def _journal_kwargs(resume_dir: Optional[str], name: str) -> Dict[str, str]:
+    """Per-figure journal under ``resume_dir``: continue it when present,
+    start it otherwise — re-running a crashed ``--resume DIR`` report
+    picks up every figure where it left off (docs/robustness.md)."""
+    if resume_dir is None:
+        return {}
+    path = os.path.join(resume_dir, f"{name}.journal.jsonl")
+    return {"resume": path} if os.path.exists(path) else {"journal": path}
+
+
+def _partial_meta(res: CampaignResult) -> Dict[str, object]:
+    """Gap accounting for incomplete campaigns.  Empty for complete ones,
+    so the committed (byte-gated) gallery's meta lines never change on
+    the clean path; renderers annotate gaps when the keys appear."""
+    missing = res.missing_cells()
+    if not missing and not res.failed_cells:
+        return {}
+    return {"missing_cells": len(missing),
+            "failed_cells": len(res.failed_cells),
+            "grid_cells": res.grid.size}
 
 
 # ---------------------------------------------------------------------------
@@ -115,7 +140,9 @@ def _campaign_config(workers: Optional[int], store: str,
 
 def _build_jct_vs_load(scale: str, workers: Optional[int] = None,
                        progress: Progress = None,
-                       engine: Optional[str] = None) -> FigureTable:
+                       engine: Optional[str] = None,
+                       fault: Optional[Dict] = None,
+                       resume_dir: Optional[str] = None) -> FigureTable:
     """Strategy × load mean-JCT sweep (Fig. 12 / Table 5)."""
     p = {
         "smoke": dict(spec=CLUSTER512, ocs=None, jobs=60, loads=(200.0, 120.0),
@@ -131,7 +158,8 @@ def _build_jct_vs_load(scale: str, workers: Optional[int] = None,
         p["spec"], grid,
         workload=WorkloadSpec(num_jobs=p["jobs"], max_gpus=256, seed=0),
         ocs_spec=p["ocs"], progress=progress,
-        config=_campaign_config(workers, p["store"], engine))
+        config=_campaign_config(workers, p["store"], engine, fault),
+        **_journal_kwargs(resume_dir, "jct-vs-load"))
     cols = ("strategy", "load", "jct_mean", "jct_p99", "queue_delay_mean",
             "contention_ratio_mean", "n_finished")
     rows = tuple(
@@ -150,12 +178,15 @@ def _build_jct_vs_load(scale: str, workers: Optional[int] = None,
                  "inter-arrival gap λ shrinks.  Smaller load value = "
                  "heavier offered load."),
         meta=_meta(scale=scale, gpus=p["spec"].num_gpus, jobs=p["jobs"],
-                   loads=p["loads"], engine=engine or "v2", store=p["store"]))
+                   loads=p["loads"], engine=engine or "v2", store=p["store"],
+                   **_partial_meta(res)))
 
 
 def _build_contention_cdf(scale: str, workers: Optional[int] = None,
                           progress: Progress = None,
-                          engine: Optional[str] = None) -> FigureTable:
+                          engine: Optional[str] = None,
+                          fault: Optional[Dict] = None,
+                          resume_dir: Optional[str] = None) -> FigureTable:
     """Per-job contention-ratio CDFs (§3 / §9.3, Fig. 13-style)."""
     p = {
         "smoke": dict(spec=CLUSTER512, jobs=60, load=120.0, max_gpus=256,
@@ -173,7 +204,8 @@ def _build_contention_cdf(scale: str, workers: Optional[int] = None,
         workload=WorkloadSpec(num_jobs=p["jobs"], max_gpus=p["max_gpus"],
                               seed=0),
         progress=progress,
-        config=_campaign_config(workers, p["store"], engine))
+        config=_campaign_config(workers, p["store"], engine, fault),
+        **_journal_kwargs(resume_dir, "contention-cdf"))
     samples = {s: [v for c in res.cells if c.strategy == s
                    for v in c.report.slowdowns]
                for s in p["strategies"]}
@@ -189,12 +221,15 @@ def _build_contention_cdf(scale: str, workers: Optional[int] = None,
                  "jobs.  vClos sits at exactly 1.0 by construction; ECMP's "
                  "tail is the §3.1 hash-collision slowdown."),
         meta=_meta(scale=scale, gpus=p["spec"].num_gpus, jobs=p["jobs"],
-                   load=p["load"], engine=engine or "v2", store=p["store"]))
+                   load=p["load"], engine=engine or "v2", store=p["store"],
+                   **_partial_meta(res)))
 
 
 def _build_frag_timeline(scale: str, workers: Optional[int] = None,
                          progress: Progress = None,
-                         engine: Optional[str] = None) -> FigureTable:
+                         engine: Optional[str] = None,
+                         fault: Optional[Dict] = None,
+                         resume_dir: Optional[str] = None) -> FigureTable:
     """Fragmentation index over time under churn: packed vs. scattered
     placement, with and without the migration-defragmentation pass.
 
@@ -202,7 +237,11 @@ def _build_frag_timeline(scale: str, workers: Optional[int] = None,
     on the identical defrag-tick grid (the no-migration variant is the
     `best` strategy with ``supports_migration`` stripped, so its ticks
     sample without moving jobs) — the curves are paired, never a sampling
-    artifact."""
+    artifact.
+
+    ``fault``/``resume_dir`` are accepted for builder-signature parity but
+    inert: this figure is three direct :func:`simulate` calls (seconds at
+    either scale), not a campaign — there are no cells to journal."""
     p = {
         "smoke": dict(jobs=120, mtbf=8000.0, preempt=0.15, defrag=2000.0),
         "paper": dict(jobs=400, mtbf=8000.0, preempt=0.15, defrag=2000.0),
@@ -255,7 +294,9 @@ def _build_frag_timeline(scale: str, workers: Optional[int] = None,
 
 def _build_ocs_comparison(scale: str, workers: Optional[int] = None,
                           progress: Progress = None,
-                          engine: Optional[str] = None) -> FigureTable:
+                          engine: Optional[str] = None,
+                          fault: Optional[Dict] = None,
+                          resume_dir: Optional[str] = None) -> FigureTable:
     """OCS-vClos vs. vClos vs. SR/ECMP under fragmentation pressure."""
     # smoke reuses the golden-trace workload (200 jobs, λ=120, seed 0 —
     # the ecmp=13417.8 / sr=3731.4 snapshot of tests/test_campaign.py), so
@@ -270,7 +311,8 @@ def _build_ocs_comparison(scale: str, workers: Optional[int] = None,
         CLUSTER512, grid,
         workload=WorkloadSpec(num_jobs=p["jobs"], max_gpus=256, seed=0),
         ocs_spec=CLUSTER512_OCS, progress=progress,
-        config=_campaign_config(workers, p["store"], engine))
+        config=_campaign_config(workers, p["store"], engine, fault),
+        **_journal_kwargs(resume_dir, "ocs-comparison"))
     cols = ("strategy", "jct_mean", "queue_delay_mean", "frag_gpu",
             "frag_network", "n_finished")
     rows = tuple(
@@ -287,7 +329,8 @@ def _build_ocs_comparison(scale: str, workers: Optional[int] = None,
                  "the OCS layer's rewiring of idle circuits exists to "
                  "relieve (paper §7, Table 5)." % p["load"]),
         meta=_meta(scale=scale, gpus=CLUSTER512.num_gpus, jobs=p["jobs"],
-                   load=p["load"], engine=engine or "v2", store=p["store"]))
+                   load=p["load"], engine=engine or "v2", store=p["store"],
+                   **_partial_meta(res)))
 
 
 #: the registry, in gallery order
@@ -313,8 +356,17 @@ def figure_names() -> Tuple[str, ...]:
 def build_figure(name: str, scale: str = "smoke",
                  workers: Optional[int] = None,
                  progress: Progress = None,
-                 engine: Optional[str] = None) -> FigureTable:
-    """Build one registered figure at the given scale."""
+                 engine: Optional[str] = None,
+                 fault: Optional[Dict] = None,
+                 resume_dir: Optional[str] = None) -> FigureTable:
+    """Build one registered figure at the given scale.
+
+    ``fault`` — optional dict of :class:`SimConfig` fault-policy overrides
+    (``cell_timeout`` / ``max_retries`` / ``retry_backoff`` /
+    ``quarantine``) applied to campaign-backed figures.  ``resume_dir`` —
+    directory of per-figure cell journals: each campaign journals to
+    ``<resume_dir>/<name>.journal.jsonl`` and resumes from it when it
+    already exists (see docs/robustness.md)."""
     if scale not in SCALES:
         raise ValueError(f"unknown scale {scale!r}; choose from {SCALES}")
     try:
@@ -323,26 +375,46 @@ def build_figure(name: str, scale: str = "smoke",
         raise ValueError(f"unknown figure {name!r}; "
                          f"choose from {figure_names()}") from None
     return spec.builder(scale, workers=workers, progress=progress,
-                        engine=engine)
+                        engine=engine, fault=fault, resume_dir=resume_dir)
 
 
 def build_all(scale: str = "smoke", names: Optional[Tuple[str, ...]] = None,
               workers: Optional[int] = None,
               progress: Progress = None,
-              engine: Optional[str] = None) -> List[FigureTable]:
+              engine: Optional[str] = None,
+              fault: Optional[Dict] = None,
+              resume_dir: Optional[str] = None) -> List[FigureTable]:
     """Build the figure suite in registry (gallery) order."""
     return [build_figure(n, scale, workers=workers, progress=progress,
-                         engine=engine)
+                         engine=engine, fault=fault, resume_dir=resume_dir)
             for n in (names if names is not None else figure_names())]
 
 
-def qualitative_checks(tables: List[FigureTable]) -> List[str]:
+def qualitative_checks(tables: List[FigureTable],
+                       allow_partial: bool = False) -> List[str]:
     """The paper's headline orderings, as checkable facts.  Returns a list
     of violations (empty = the reproduced data tells the paper's story):
     on every JCT table, each isolated strategy strictly beats ECMP's mean
-    JCT at every load."""
+    JCT at every load.
+
+    Incomplete tables (built from campaigns with quarantined or missing
+    cells — their meta carries ``missing_cells``) are a violation in
+    their own right: orderings over partial data could silently pass on
+    exactly the cells that happened to survive.  ``allow_partial=True``
+    downgrades that to skipping the ordering checks for those tables
+    (the gap stays visible in the rendered gallery)."""
     problems: List[str] = []
     for tab in tables:
+        missing = tab.meta_dict().get("missing_cells", 0)
+        if missing:
+            if not allow_partial:
+                problems.append(
+                    f"{tab.name}: incomplete campaign data ({missing} of "
+                    f"{tab.meta_dict().get('grid_cells', '?')} cells "
+                    f"missing); refusing qualitative gates on partial "
+                    f"data (pass allow_partial=True / --allow-partial to "
+                    f"render with visible gaps)")
+            continue
         if tab.name not in ("jct-vs-load", "ocs-comparison"):
             continue
         cols = tab.columns

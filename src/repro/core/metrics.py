@@ -98,6 +98,32 @@ class MetricsReport:
         self.condensed = True
         return self
 
+    # -- journal round-trip (repro.core.runtime.CellJournal) ----------------
+    def to_journal(self) -> Dict:
+        """JSON-safe dict losing nothing: floats survive JSON via
+        shortest-round-trip repr, so ``from_journal(to_journal(r))`` is
+        field-for-field equal to ``r`` — the bit-identical-resume
+        contract of the campaign journal rests on this."""
+        # flat field walk instead of dataclasses.asdict: every field is a
+        # scalar or a shallow list, and asdict's recursive deep-copy is the
+        # dominant cost of a journal append (~3x the json.dumps itself)
+        d = {name: getattr(self, name)
+             for name in self.__dataclass_fields__}
+        d["jcts"] = list(self.jcts)
+        d["jwts"] = list(self.jwts)
+        d["slowdowns"] = list(self.slowdowns)
+        d["frag_series"] = [list(p) for p in self.frag_series]
+        d["event_log"] = [list(e) for e in self.event_log]
+        return d
+
+    @classmethod
+    def from_journal(cls, d: Dict) -> "MetricsReport":
+        """Inverse of :meth:`to_journal` (restores ``event_log`` tuples,
+        which JSON flattens to lists)."""
+        d = dict(d)
+        d["event_log"] = [tuple(e) for e in d.get("event_log", [])]
+        return cls(**d)
+
     def row(self) -> Dict[str, float]:
         return {
             "avg_jrt": self.avg_jrt, "avg_jwt": self.avg_jwt,

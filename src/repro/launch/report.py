@@ -31,6 +31,7 @@ from __future__ import annotations
 import argparse
 import csv
 import io
+import os
 import sys
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence
@@ -150,6 +151,15 @@ def render_markdown(tables, scale: str, asset_prefix: str = "assets") -> str:
         L += [f"## {t.title}", "",
               f"![{t.title}]({asset_prefix}/{slug}.svg)", "",
               t.caption, ""]
+        meta_d = t.meta_dict()
+        if meta_d.get("missing_cells"):
+            # visible gap annotation: a partial campaign (quarantined /
+            # never-run cells) renders, but never silently
+            L += [f"> **⚠ Partial data** — {meta_d['missing_cells']} of "
+                  f"{meta_d.get('grid_cells', '?')} grid cells missing "
+                  f"({meta_d.get('failed_cells', 0)} quarantined).  Rows "
+                  f"below pool only the surviving cells; resume the cell "
+                  f"journal to fill the gaps (docs/robustness.md).", ""]
         if t.kind in ("line", "bar"):
             L += _md_table(t.columns, t.rows)
         elif t.kind == "cdf":
@@ -245,12 +255,16 @@ def render_figure(table, path: Path) -> bool:
     ax.set_title(table.title, fontsize=11, color=_TEXT, pad=10)
     fig.tight_layout()
     path.parent.mkdir(parents=True, exist_ok=True)
+    # atomic: render into *.tmp and os.replace, so an interrupted run
+    # never leaves a truncated SVG for docs_lint/browsers to choke on
+    tmp = path.with_name(path.name + ".tmp")
     if path.suffix == ".svg":
         # deterministic bytes: svg.hashsalt is pinned and the Date field
         # (the only run-varying metadata) is stripped
-        fig.savefig(path, format="svg", metadata={"Date": None})
+        fig.savefig(tmp, format="svg", metadata={"Date": None})
     else:
-        fig.savefig(path)
+        fig.savefig(tmp, format=path.suffix.lstrip(".") or None)
+    os.replace(tmp, path)
     plt.close(fig)
     return True
 
@@ -259,26 +273,40 @@ def render_figure(table, path: Path) -> bool:
 # Generate / check
 # ---------------------------------------------------------------------------
 
-def _build(scale: str, names, workers, progress, engine=None):
+def _build(scale: str, names, workers, progress, engine=None, fault=None,
+           resume_dir=None):
     from repro.core.figures import build_all
     return build_all(scale, names=names, workers=workers, progress=progress,
-                     engine=engine)
+                     engine=engine, fault=fault, resume_dir=resume_dir)
 
 
 def generate(scale: str = "smoke", out_dir: Optional[Path] = None,
              names=None, workers: Optional[int] = None,
              render: bool = True, progress=print,
-             engine: Optional[str] = None) -> Path:
+             engine: Optional[str] = None,
+             fault: Optional[Dict] = None,
+             resume_dir: Optional[Path] = None,
+             allow_partial: bool = False) -> Path:
     """Build the suite and write gallery + CSVs (+ SVGs).  Returns the
     gallery path.  Smoke writes the committed ``docs/`` artifacts; paper
-    defaults to ``reports/paper/``."""
+    defaults to ``reports/paper/``.
+
+    ``fault`` — SimConfig fault-policy overrides for the campaign-backed
+    figures; ``resume_dir`` — directory of per-figure cell journals
+    (created on first run, resumed on the next); ``allow_partial`` —
+    render campaigns with quarantined/missing cells as a gallery with
+    visible gap annotations instead of failing the qualitative gates
+    (docs/robustness.md)."""
     from repro.core.figures import qualitative_checks
-    tables = _build(scale, names, workers, progress, engine)
-    problems = qualitative_checks(tables)
+    tables = _build(scale, names, workers, progress, engine, fault,
+                    str(resume_dir) if resume_dir is not None else None)
+    problems = qualitative_checks(tables, allow_partial=allow_partial)
     if problems:
         raise SystemExit("[report] reproduced data lost the paper's "
                          "qualitative orderings:\n  - "
                          + "\n  - ".join(problems))
+    incomplete = [t.name for t in tables
+                  if t.meta_dict().get("missing_cells")]
     if out_dir is None:
         doc, assets, prefix = RESULTS_DOC, SMOKE_ASSETS, "assets"
         if scale != "smoke":
@@ -290,13 +318,22 @@ def generate(scale: str = "smoke", out_dir: Optional[Path] = None,
             raise SystemExit(
                 "[report] --figures subsets write into the committed "
                 "docs/assets; pass --out-dir (or drop --figures)")
+        elif incomplete:
+            # same rule for incomplete data: a gap-annotated gallery in
+            # docs/ would fail the byte drift gate on the next make check
+            raise SystemExit(
+                f"[report] incomplete campaign data "
+                f"({', '.join(incomplete)}) cannot overwrite the committed "
+                f"docs/ gallery; pass --out-dir (and resume the journals "
+                f"to fill the gaps)")
     else:
         out_dir = Path(out_dir)
         doc, assets, prefix = out_dir / "results.md", out_dir / "assets", \
             "assets"
     assets.mkdir(parents=True, exist_ok=True)
+    from repro.core.runtime import atomic_write_text
     for t in tables:
-        (assets / f"{t.name}.{scale}.csv").write_text(csv_text(t))
+        atomic_write_text(assets / f"{t.name}.{scale}.csv", csv_text(t))
         if render:
             if not render_figure(t, assets / f"{t.name}.{scale}.svg"):
                 progress("[report] matplotlib unavailable - SVGs skipped "
@@ -305,8 +342,12 @@ def generate(scale: str = "smoke", out_dir: Optional[Path] = None,
     # partial-suite runs never overwrite the committed full gallery
     if names is None:
         doc.parent.mkdir(parents=True, exist_ok=True)
-        doc.write_text(render_markdown(tables, scale, prefix))
+        atomic_write_text(doc, render_markdown(tables, scale, prefix))
         progress(f"[report] gallery -> {doc}")
+        if incomplete:
+            progress(f"[report] WARNING: partial data in "
+                     f"{', '.join(incomplete)} — gaps annotated in the "
+                     f"gallery")
     else:
         progress(f"[report] partial suite ({', '.join(names)}): assets "
                  f"written, gallery untouched")
@@ -368,6 +409,25 @@ def main() -> None:
                          "see docs/batched.md)")
     ap.add_argument("--no-render", action="store_true",
                     help="skip matplotlib SVGs (data + gallery only)")
+    ap.add_argument("--cell-timeout", type=float, default=None,
+                    metavar="SECONDS",
+                    help="kill campaign cells running longer than this "
+                         "(> 0; forces pool execution)")
+    ap.add_argument("--max-retries", type=int, default=None, metavar="N",
+                    help="extra attempts for crashed / timed-out / "
+                         "transient cells (>= 0; default 2)")
+    ap.add_argument("--quarantine", action="store_true",
+                    help="skip permanently-failing cells and render with "
+                         "visible gaps instead of aborting (implies "
+                         "--allow-partial)")
+    ap.add_argument("--resume", default=None, metavar="DIR",
+                    help="journal each figure's campaign cells under DIR "
+                         "and resume from existing journals there — "
+                         "re-running after a crash skips finished cells "
+                         "(bit-identical merge; docs/robustness.md)")
+    ap.add_argument("--allow-partial", action="store_true",
+                    help="render incomplete campaigns (gap-annotated) "
+                         "instead of failing the qualitative gates")
     ap.add_argument("--check", action="store_true",
                     help="regenerate the smoke suite in memory and fail on "
                          "any drift against the committed docs/ artifacts "
@@ -377,6 +437,21 @@ def main() -> None:
     if unknown:
         ap.error(f"unknown figure(s) {', '.join(unknown)}; "
                  f"choose from {', '.join(figure_names())}")
+    if args.cell_timeout is not None and args.cell_timeout <= 0:
+        ap.error(f"--cell-timeout must be > 0 seconds "
+                 f"(got {args.cell_timeout:g}); omit it to disable "
+                 f"per-cell timeouts")
+    if args.max_retries is not None and args.max_retries < 0:
+        ap.error(f"--max-retries must be >= 0 (got {args.max_retries}); "
+                 f"0 means a single attempt per cell")
+    if args.resume is not None:
+        rd = Path(args.resume)
+        if rd.exists() and not rd.is_dir():
+            ap.error(f"--resume {args.resume!r} is a file; the report "
+                     f"keeps one journal per figure, so --resume takes a "
+                     f"directory (use sweep campaign --resume for a "
+                     f"single-journal campaign)")
+        rd.mkdir(parents=True, exist_ok=True)
     if args.check:
         if args.scale != "smoke":
             ap.error("--check compares the committed smoke artifacts; "
@@ -393,9 +468,16 @@ def main() -> None:
         print("report-check: OK (docs/results.md + smoke CSVs in sync, "
               "orderings hold)")
         return
+    fault = {k: v for k, v in (("cell_timeout", args.cell_timeout),
+                               ("max_retries", args.max_retries),
+                               ("quarantine", args.quarantine or None))
+             if v is not None}
     generate(args.scale, Path(args.out_dir) if args.out_dir else None,
              names=args.figures, workers=args.workers,
-             render=not args.no_render, engine=args.engine)
+             render=not args.no_render, engine=args.engine,
+             fault=fault or None,
+             resume_dir=Path(args.resume) if args.resume else None,
+             allow_partial=args.allow_partial or args.quarantine)
 
 
 if __name__ == "__main__":

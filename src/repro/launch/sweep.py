@@ -172,6 +172,26 @@ def campaign_main(argv) -> None:
                     help="streaming aggregation: bound per-cell memory to "
                          "O(512) samples (10k-job campaigns)")
     ap.add_argument("--ilp-time-limit", type=float, default=2.0)
+    ap.add_argument("--cell-timeout", type=float, default=None,
+                    metavar="SECONDS",
+                    help="kill cells running longer than this (> 0; "
+                         "forces pool execution so hung cells can be "
+                         "terminated)")
+    ap.add_argument("--max-retries", type=int, default=None, metavar="N",
+                    help="extra attempts for crashed / timed-out / "
+                         "transient cells (>= 0; default 2)")
+    ap.add_argument("--quarantine", action="store_true",
+                    help="record permanently-failing cells in "
+                         "failed_cells and keep going instead of "
+                         "aborting the campaign")
+    ap.add_argument("--journal", default=None, metavar="PATH",
+                    help="append every completed cell to this JSONL "
+                         "journal (crash-safe; resume with --resume)")
+    ap.add_argument("--resume", default=None, metavar="PATH",
+                    help="continue a journaled campaign: skip cells "
+                         "already in PATH and append new completions — "
+                         "the merged result is bit-identical to an "
+                         "uninterrupted run (docs/robustness.md)")
     ap.add_argument("--out", default=None, help="write the JSON report here")
     args = ap.parse_args(argv)
     if args.list_strategies:
@@ -181,6 +201,23 @@ def campaign_main(argv) -> None:
     if args.deadline_slack is not None and len(args.deadline_slack) != 2:
         ap.error("--deadline-slack takes exactly two values: LO,HI "
                  f"(got {','.join(map(str, args.deadline_slack))})")
+    if args.cell_timeout is not None and args.cell_timeout <= 0:
+        ap.error(f"--cell-timeout must be > 0 seconds "
+                 f"(got {args.cell_timeout:g}); omit it to disable "
+                 f"per-cell timeouts")
+    if args.max_retries is not None and args.max_retries < 0:
+        ap.error(f"--max-retries must be >= 0 (got {args.max_retries}); "
+                 f"0 means a single attempt per cell")
+    if args.journal and args.resume and args.journal != args.resume:
+        ap.error("pass either --journal PATH (start a fresh journal) or "
+                 "--resume PATH (continue one), not both")
+    if args.resume and not os.path.exists(args.resume):
+        ap.error(f"--resume {args.resume!r} does not exist; use "
+                 f"--journal {args.resume!r} to start a fresh journal")
+    if args.journal and not args.resume and os.path.exists(args.journal):
+        ap.error(f"--journal {args.journal!r} already exists; use "
+                 f"--resume {args.journal!r} to continue it (or remove "
+                 f"the file for a fresh run)")
     if args.trace:
         clash = [name for name, val in
                  (("--jobs", args.jobs), ("--size-mix", args.size_mix),
@@ -230,10 +267,21 @@ def campaign_main(argv) -> None:
                        workers=args.workers,
                        store="stream" if args.stream else "full",
                        defrag_interval=args.defrag,
-                       ilp_time_limit=args.ilp_time_limit)
-    result = run_campaign(spec, grid, workload=workload, trace=trace,
-                          ocs_spec=ocs_spec, config=config,
-                          progress=lambda m: print(m, flush=True))
+                       ilp_time_limit=args.ilp_time_limit,
+                       cell_timeout=args.cell_timeout or 0.0,
+                       max_retries=(2 if args.max_retries is None
+                                    else args.max_retries),
+                       quarantine=args.quarantine)
+    from repro.core import JournalMismatch
+    try:
+        result = run_campaign(spec, grid, workload=workload, trace=trace,
+                              ocs_spec=ocs_spec, config=config,
+                              journal=args.journal, resume=args.resume,
+                              progress=lambda m: print(m, flush=True))
+    except JournalMismatch as e:
+        # surface journal/grid mismatches as CLI usage errors, like the
+        # --events validation above
+        ap.error(str(e))
     cols = ("strategy", "scheduler", "load", "n_finished", "jct_mean",
             "jct_p99", "queue_delay_mean", "makespan_mean",
             "contention_ratio_mean")
@@ -248,6 +296,21 @@ def campaign_main(argv) -> None:
                                                 "frag_index_mean")
                        else f"{row[c]:.1f}" if isinstance(row[c], float)
                        else str(row[c]) for c in cols))
+    if result.resumed_cells:
+        print(f"[campaign] {result.resumed_cells} cell(s) loaded from "
+              f"the journal", flush=True)
+    if result.failed_cells:
+        print(f"[campaign] WARNING: {len(result.failed_cells)} cell(s) "
+              f"quarantined:", flush=True)
+        for fc in result.failed_cells:
+            print(f"  - {fc.strategy}/{fc.scheduler} λ={fc.load:g} "
+                  f"seed={fc.seed}: {fc.kind} after {fc.attempts} "
+                  f"attempt(s) — {fc.error}", flush=True)
+    missing = result.missing_cells()
+    if missing:
+        print(f"[campaign] WARNING: table above pools only "
+              f"{result.grid.size - len(missing)}/{result.grid.size} "
+              f"cells", flush=True)
     if args.out:
         result.save(args.out)
         print(f"[campaign] report -> {args.out}", flush=True)

@@ -284,3 +284,82 @@ def test_batched_engine_parity_is_a_property(jobs, strategy, seed):
     assert vb.jcts == v2.jcts
     assert vb.jwts == v2.jwts
     assert vb.slowdowns == v2.slowdowns
+
+
+# ---------------------------------------------------------------------------
+# Part 4 — fault-tolerant runtime (ISSUE 7): resume ≡ uninterrupted, as a
+# property over random crash schedules
+# ---------------------------------------------------------------------------
+
+_RESUME_GRID = None
+_RESUME_CLEAN = None
+
+
+def _resume_baseline():
+    """Clean campaign computed once (the property replays against it)."""
+    global _RESUME_GRID, _RESUME_CLEAN
+    if _RESUME_CLEAN is None:
+        from repro.core import CampaignGrid, WorkloadSpec, run_campaign
+        from repro.core.topology import CLUSTER512
+        _RESUME_GRID = CampaignGrid(strategies=("ecmp", "sr"),
+                                    loads=(120.0,), seeds=(0, 1))
+        _RESUME_CLEAN = run_campaign(
+            CLUSTER512, _RESUME_GRID,
+            workload=WorkloadSpec(num_jobs=25, max_gpus=64),
+            config=SimConfig(retry_backoff=0.0))
+    return _RESUME_GRID, _RESUME_CLEAN
+
+
+@settings(max_examples=10, deadline=None)
+@given(crash_cells=st.sets(st.integers(0, 3), min_size=1, max_size=3),
+       store=st.sampled_from(("full", "stream")))
+def test_random_crash_schedule_resume_equals_clean(crash_cells, store,
+                                                   tmp_path_factory):
+    """Any set of deterministically-failing cells aborts the campaign;
+    repeatedly resuming the journal with one fewer armed failure each
+    round must converge to a result whose cells are bit-identical to an
+    uninterrupted run (sample arrays compared exactly).  Exercises
+    multi-failure resume chains the example-based chaos suite
+    (tests/test_runtime.py) doesn't enumerate."""
+    import os
+
+    from repro.core import CampaignError, WorkloadSpec, run_campaign
+    from repro.core.topology import CLUSTER512
+    grid, clean_full = _resume_baseline()
+    wl = WorkloadSpec(num_jobs=25, max_gpus=64)
+    cfg = SimConfig(retry_backoff=0.0, max_retries=0, store=store)
+    jp = str(tmp_path_factory.mktemp("chaos") / "journal.jsonl")
+    armed = sorted(crash_cells)
+    first = True
+    try:
+        while True:
+            os.environ["REPRO_CHAOS"] = ",".join(
+                f"raise@{c}" for c in armed) or "raise@999"
+            kw = {"journal": jp} if first else {"resume": jp}
+            first = False
+            try:
+                res = run_campaign(CLUSTER512, grid, workload=wl,
+                                   config=cfg, **kw)
+                break
+            except CampaignError as e:
+                key = e.failed.key()
+                idx = [i for i, c in enumerate(grid.cells())
+                       if c == key][0]
+                assert idx in armed          # only armed cells may fail
+                armed.remove(idx)
+    finally:
+        os.environ.pop("REPRO_CHAOS", None)
+    assert res.complete and not res.failed_cells
+    want = {(c.strategy, c.scheduler, c.load, c.seed): c.report
+            for c in clean_full.cells}
+    assert len(res.cells) == len(want)
+    for c in res.cells:
+        ref = want[(c.strategy, c.scheduler, c.load, c.seed)]
+        assert c.report.n_finished == ref.n_finished
+        if store == "full":
+            assert c.report == ref           # exact, every field
+        else:
+            # streaming cells condense; the exact scalars must still match
+            assert c.report.avg_jct == ref.avg_jct
+            assert c.report.avg_jwt == ref.avg_jwt
+            assert c.report.event_log == ref.event_log
