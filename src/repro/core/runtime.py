@@ -266,22 +266,30 @@ class CellJournal:
             raise ValueError(f"resume journal {path!r} does not exist; "
                              f"pass journal= for a fresh run")
         schema = cls._normalize(schema)
-        with open(path) as f:
-            lines = f.read().splitlines()
+        with open(path, "rb") as f:
+            raw = f.read()
+        # split on the writer's own terminator (records are one "\n"-ended
+        # line each) so every segment's byte offset is exact — needed to
+        # truncate a torn tail below
+        segments = raw.split(b"\n")
         records = []
-        for n, line in enumerate(lines):
-            if not line.strip():
-                continue
-            try:
-                records.append(json.loads(line))
-            except json.JSONDecodeError:
-                if n == len(lines) - 1:
-                    # torn tail: the crash interrupted the final append —
-                    # drop it, that cell re-simulates
-                    break
-                raise ValueError(
-                    f"journal {path!r} is corrupt at line {n + 1} (only "
-                    f"the final line may be torn); refusing to resume")
+        torn_at: Optional[int] = None   # byte offset where a torn tail starts
+        offset = 0
+        for n, seg in enumerate(segments):
+            line = seg.decode("utf-8", errors="replace")
+            if line.strip():
+                try:
+                    records.append(json.loads(line))
+                except json.JSONDecodeError:
+                    if n == len(segments) - 1:
+                        # torn tail: the crash interrupted the final append —
+                        # drop it, that cell re-simulates
+                        torn_at = offset
+                        break
+                    raise ValueError(
+                        f"journal {path!r} is corrupt at line {n + 1} (only "
+                        f"the final line may be torn); refusing to resume")
+            offset += len(seg) + 1
         if not records or records[0].get("kind") != "header":
             raise JournalMismatch(
                 f"journal {path!r} has no header record — not a campaign "
@@ -307,7 +315,20 @@ class CellJournal:
             key = (str(s), str(q), float(load), int(seed))
             completed[key] = (MetricsReport.from_journal(rec["report"]),
                               float(rec["wall_time"]))
-        return cls(path, schema, open(path, "a")), completed
+        if torn_at is not None:
+            # chop the torn bytes off before reopening for append: without
+            # this the next record would concatenate onto the partial line,
+            # planting mid-file corruption that poisons the *next* resume
+            with open(path, "r+b") as f:
+                f.truncate(torn_at)
+        fh = open(path, "a")
+        if torn_at is None and raw and not raw.endswith(b"\n"):
+            # final record is complete but its terminator never hit disk
+            # (torn between the JSON and the "\n"): restore the newline so
+            # the next append starts a fresh line
+            fh.write("\n")
+            fh.flush()
+        return cls(path, schema, fh), completed
 
     # -- appends ------------------------------------------------------------
     def append(self, key: CellKey, report: MetricsReport,
@@ -497,6 +518,12 @@ class CellRunner:
                 wt = max(0.0, min(deadlines) - now) if deadlines else None
                 done, _ = wait(set(inflight), timeout=wt,
                                return_when=FIRST_COMPLETED)
+                if not done:
+                    # futures can finish between wait() timing out and the
+                    # expiry scan below; harvest them through the normal
+                    # done path (success / exception / crash alike) instead
+                    # of throwing the finished work away with the pool kill
+                    done = {f for f in inflight if f.done()}
 
                 if not done:
                     # a deadline expired with the worker still grinding: a
@@ -572,7 +599,7 @@ def _shutdown_pool(pool, kill: bool) -> None:
     processes outright (the only way to stop a hung or wedged cell)."""
     try:
         if kill:
-            for p in list(getattr(pool, "_processes", None) or {}.values()):
+            for p in list((getattr(pool, "_processes", None) or {}).values()):
                 try:
                     p.terminate()
                 except Exception:

@@ -12,6 +12,7 @@ flakiness.
 import dataclasses
 import json
 import os
+import time
 
 import pytest
 
@@ -153,12 +154,58 @@ def test_journal_torn_tail_dropped_midfile_corruption_raises(tmp_path):
     assert set(completed) == {("ecmp", "fifo", 120.0, 0),
                               ("sr", "fifo", 120.0, 0)}
     assert completed[("sr", "fifo", 120.0, 0)][0] == rep
-    # the same torn line anywhere but the tail is external corruption
+    # resume truncated the torn bytes: every line on disk parses again
     lines = open(p).read().splitlines()
-    lines[1], lines[-1] = lines[-1], lines[1]
+    assert all(json.loads(line) for line in lines)
+    # the same torn line anywhere but the tail is external corruption
+    lines.insert(1, '{"kind": "cell", "cell": ["ecmp", "fifo"')
     open(p, "w").write("\n".join(lines))
     with pytest.raises(ValueError, match="corrupt at line 2"):
         CellJournal.resume(p, {"v": 1})
+
+
+def test_journal_torn_tail_truncated_then_reappend(tmp_path):
+    """Regression: resume() must *truncate* the torn bytes, not just skip
+    them — otherwise the first appended record concatenates onto the
+    partial line, planting mid-file corruption that makes the next
+    resume refuse with 'corrupt', losing access to every journaled cell."""
+    p = str(tmp_path / "j.jsonl")
+    jr = CellJournal.create(p, {"v": 1})
+    rep = MetricsReport(1.0, 2.0, 3.0, 0.0, 0.0, 1)
+    jr.append(("ecmp", "fifo", 120.0, 0), rep, 0.5)
+    jr.close()
+    with open(p, "a") as f:
+        f.write('{"kind": "cell", "cell": ["sr", "fifo"')      # torn tail
+    jr2, completed = CellJournal.resume(p, {"v": 1})
+    assert set(completed) == {("ecmp", "fifo", 120.0, 0)}
+    jr2.append(("sr", "fifo", 120.0, 0), rep, 0.5)             # re-simulated
+    jr2.close()
+    jr3, completed = CellJournal.resume(p, {"v": 1})           # crash again
+    jr3.close()
+    assert set(completed) == {("ecmp", "fifo", 120.0, 0),
+                              ("sr", "fifo", 120.0, 0)}
+    assert completed[("sr", "fifo", 120.0, 0)][0] == rep
+
+
+def test_journal_missing_final_newline_restored(tmp_path):
+    """A write torn between the JSON and its "\\n" terminator leaves a
+    complete final record with no newline: the record must be kept and
+    the terminator restored so the next append starts a fresh line."""
+    p = str(tmp_path / "j.jsonl")
+    jr = CellJournal.create(p, {"v": 1})
+    rep = MetricsReport(1.0, 2.0, 3.0, 0.0, 0.0, 1)
+    jr.append(("ecmp", "fifo", 120.0, 0), rep, 0.5)
+    jr.close()
+    with open(p, "r+b") as f:                   # tear off just the "\n"
+        f.truncate(os.path.getsize(p) - 1)
+    jr2, completed = CellJournal.resume(p, {"v": 1})
+    assert set(completed) == {("ecmp", "fifo", 120.0, 0)}      # record kept
+    jr2.append(("sr", "fifo", 120.0, 0), rep, 0.5)
+    jr2.close()
+    jr3, completed = CellJournal.resume(p, {"v": 1})
+    jr3.close()
+    assert set(completed) == {("ecmp", "fifo", 120.0, 0),
+                              ("sr", "fifo", 120.0, 0)}
 
 
 # ---------------------------------------------------------------------------
@@ -256,6 +303,26 @@ def test_campaign_result_save_atomic(tmp_path, clean):
 # ---------------------------------------------------------------------------
 # pool campaigns: worker death, isolation, timeouts (slow: real processes)
 # ---------------------------------------------------------------------------
+
+def test_shutdown_pool_kills_hung_workers():
+    """Regression: _shutdown_pool(kill=True) must terminate the worker
+    *processes* (an operator-precedence bug once made it iterate raw PIDs,
+    so terminate() never ran and hung workers leaked past the kill)."""
+    from concurrent.futures import ProcessPoolExecutor
+
+    from repro.core.runtime import _shutdown_pool
+    pool = ProcessPoolExecutor(max_workers=2)
+    pool.submit(time.sleep, 300)                # hang both workers
+    pool.submit(time.sleep, 300)
+    deadline = time.monotonic() + 10.0
+    while len(pool._processes or {}) < 2 and time.monotonic() < deadline:
+        time.sleep(0.05)
+    procs = list(pool._processes.values())
+    assert procs
+    _shutdown_pool(pool, kill=True)
+    for p in procs:
+        p.join(timeout=10.0)
+        assert not p.is_alive()                 # dead, not sleeping out 300s
 
 @pytest.mark.slow
 @pytest.mark.parametrize("store", ["full", "stream"])
