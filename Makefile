@@ -4,7 +4,7 @@ export PYTHONPATH := src
 
 .PHONY: test test-fast test-batched test-chaos bench-smoke bench bench-gate \
         docs-lint docs-lint-fast check report report-smoke report-paper \
-        examples-smoke
+        examples-smoke service-smoke
 
 test:            ## tier-1 verification (what CI gates on) — the full suite
 	$(PY) -m pytest -x -q
@@ -21,8 +21,8 @@ test-chaos:      ## fault-tolerant runtime: crash/hang/flaky recovery + bit-iden
 bench-smoke:     ## ~60s campaign smoke: v2-vs-v1 speedup, JCT identity, parallel path
 	$(PY) -m benchmarks.bench_campaign
 
-bench-json:      ## campaign + batched + scale + fairshare + report benches -> BENCH_campaign.json (+ gate)
-	$(PY) -m benchmarks.run --only campaign,batched,scale,fairshare,report --json
+bench-json:      ## campaign + batched + scale + fairshare + report + service benches -> BENCH_campaign.json (+ gate)
+	$(PY) -m benchmarks.run --only campaign,batched,scale,fairshare,report,service --json
 	$(PY) scripts/bench_gate.py
 
 bench-gate:      ## fail if the committed BENCH_campaign.json lost the 5x target
@@ -46,10 +46,13 @@ report-paper:    ## full figure suite (v2 streaming, 2048-GPU sweep) -> reports/
 examples-smoke:  ## examples compile + their repro.* imports resolve + fast ones run
 	$(PY) scripts/examples_smoke.py
 
+service-smoke:   ## scheduler daemon end-to-end: TCP session, quotas, what-if, log replay (docs/service.md)
+	$(PY) scripts/service_smoke.py
+
 # check runs docs-lint with --no-results: report-smoke already rebuilds the
 # smoke figure suite and byte-compares the gallery, so the drift check runs
 # exactly once per check (standalone `make docs-lint` keeps the full set)
-check: docs-lint-fast bench-gate examples-smoke report-smoke test-fast test-batched test-chaos   ## lint + perf gate + fast tests (full tier-1: make test)
+check: docs-lint-fast bench-gate examples-smoke service-smoke report-smoke test-fast test-batched test-chaos   ## lint + perf gate + fast tests (full tier-1: make test)
 
 docs-lint-fast:
 	$(PY) scripts/docs_lint.py --no-results

@@ -1,0 +1,174 @@
+"""Scheduler-service load test: sustained qps + placement tail latency.
+
+Boots the real asyncio TCP daemon (``repro.service``) on an ephemeral
+port, pre-loads a 512-GPU cluster with running jobs, then fans out
+thousands of concurrent protocol queries over dozens of connections — a
+mixed op stream of ``place`` (bounded-latency placement probe), ``stats``,
+``admit``, and ``whatif`` (digital-twin forks, exercising the
+fabric-version memo under load).  Client-observed round-trip latency is
+recorded per ``place`` call; the derived row carries sustained qps and the
+p50/p99 against the gated bound (``scripts/bench_gate.py``).
+
+The row also re-runs the differential replay oracle inline — a trace fed
+through the service event loop must stay bit-identical to offline
+``simulate()`` for ecmp, sr, and vclos — so ``replay_identical`` lands in
+``BENCH_campaign.json`` next to the latency numbers it certifies.
+
+  PYTHONPATH=src python -m benchmarks.bench_service [--full]
+"""
+
+from __future__ import annotations
+
+import asyncio
+import copy
+import time
+
+from .common import timed
+
+#: gated client-observed placement p99 bound (ms) — generous against CI
+#: noise, but catches an accidental O(cluster) regression on the hot path
+P99_BOUND_MS = 250.0
+
+CLUSTER_GPUS = 512
+
+
+def _fresh(jobs):
+    out = [copy.copy(j) for j in jobs]
+    for j in out:
+        j.start_time = j.finish_time = j.remaining_iters = None
+    return out
+
+
+def _replay_oracle() -> bool:
+    """ecmp + sr + vclos must replay bit-identically through the service
+    loop (vclos covers the isolated-strategy requirement)."""
+    from repro.core import CLUSTER512, SimConfig, WorkloadSpec, generate_trace
+    from repro.service import LiveCluster, RecordingSimulator, replay_trace
+    jobs = generate_trace(WorkloadSpec(num_jobs=80, mean_interarrival=60.0,
+                                       seed=3))
+    for strategy in ("ecmp", "sr", "vclos"):
+        cfg = SimConfig(strategy=strategy, scheduler="fifo", seed=0,
+                        engine="v2")
+        live = LiveCluster(CLUSTER512, cfg)
+        rep = replay_trace(live, _fresh(jobs))
+        off = RecordingSimulator(CLUSTER512, config=cfg)
+        rep_off = off.run(_fresh(jobs))
+        if rep.to_journal() != rep_off.to_journal() \
+                or live.sim.placements != off.placements:
+            return False
+    return True
+
+
+async def _connection(host, port, ops, place_lat):
+    from repro.service import AsyncSchedClient
+    c = await AsyncSchedClient.connect(host, port)
+    try:
+        for kind, payload in ops:
+            if kind == "place":
+                t0 = time.perf_counter()
+                await c.place(*payload)
+                place_lat.append(time.perf_counter() - t0)
+            elif kind == "stats":
+                await c.stats()
+            elif kind == "admit":
+                await c.admit(*payload)
+            else:  # whatif
+                await c.whatif(*payload[0], strategies=payload[1])
+    finally:
+        await c.close()
+
+
+def _op_stream(conn_id: int, n_ops: int):
+    """Deterministic mixed op stream — mostly placement probes, a sprinkle
+    of twin queries (distinct shapes per connection so the memo sees both
+    cold misses and hits)."""
+    sizes = (4, 8, 16, 32)
+    models = ("resnet50", "bert", "moe", "vgg16")
+    ops = []
+    for i in range(n_ops):
+        r = (conn_id * 7919 + i * 104729) % 100
+        if r < 70:
+            ops.append(("place", (models[i % 4], sizes[(conn_id + i) % 4],
+                                  1000)))
+        elif r < 85:
+            ops.append(("stats", None))
+        elif r < 95:
+            ops.append(("admit", ("default", sizes[i % 4])))
+        else:
+            ops.append(("whatif", ((models[conn_id % 4],
+                                    sizes[conn_id % 4], 1000),
+                                   ["sr", "ecmp"])))
+    return ops
+
+
+async def _drive(host, port, connections, ops_per_conn):
+    place_lat = []
+    await asyncio.gather(*[
+        _connection(host, port, _op_stream(cid, ops_per_conn), place_lat)
+        for cid in range(connections)])
+    return place_lat
+
+
+def run(fast: bool = True):
+    from repro.core import (CLUSTER512, SimConfig, WorkloadSpec,
+                            generate_trace)
+    from repro.service import LiveCluster, SchedulerService, ServerThread
+
+    connections = 64 if fast else 128
+    ops_per_conn = 32 if fast else 64
+    n_queries = connections * ops_per_conn        # >= 1000 even in fast
+
+    # pre-load: a half-occupied 512-GPU cluster with a real queue
+    live = LiveCluster(CLUSTER512,
+                       SimConfig(strategy="sr", scheduler="fifo", seed=0,
+                                 engine="v2"))
+    for job in _fresh(generate_trace(WorkloadSpec(
+            num_jobs=40, mean_interarrival=5.0, seed=11))):
+        live.submit(job)
+    server = ServerThread(SchedulerService(live))
+    host, port = server.start()
+
+    state = {}
+
+    def load():
+        t0 = time.perf_counter()
+        place_lat = asyncio.run(_drive(host, port, connections,
+                                       ops_per_conn))
+        wall = time.perf_counter() - t0
+        lat = sorted(place_lat)
+        p = lambda q: round(lat[int(q * (len(lat) - 1))] * 1e3, 3)
+        state.update(wall=wall, n_place=len(lat),
+                     p50=p(0.50), p99=p(0.99))
+        return round(n_queries / wall, 1)
+
+    row = timed(f"bench_service[{connections}x{ops_per_conn}]", load)
+    qps = row["derived"]
+
+    from repro.service import SchedClient
+    with SchedClient(host, port) as c:
+        c.shutdown()
+    server.join()
+
+    replay_ok = _replay_oracle()
+    row["derived"] = {
+        "queries": n_queries,
+        "connections": connections,
+        "cluster_gpus": CLUSTER_GPUS,
+        "qps": qps,
+        "n_place_calls": state["n_place"],
+        "place_p50_ms": state["p50"],
+        "place_p99_ms": state["p99"],
+        "p99_bound_ms": P99_BOUND_MS,
+        "meets_service_p99_bound": state["p99"] <= P99_BOUND_MS,
+        "replay_identical": replay_ok,
+    }
+    return [row]
+
+
+if __name__ == "__main__":
+    import argparse
+    from .common import emit
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    emit(run(fast=not args.full))

@@ -32,13 +32,15 @@ MODULES = [
     ("scale", "benchmarks.bench_scale"),
     ("fairshare", "benchmarks.bench_fairshare"),
     ("report", "benchmarks.bench_report"),
+    ("service", "benchmarks.bench_service"),
     ("roofline", "benchmarks.roofline"),
 ]
 
 #: rows whose ``derived`` payload is copied into the JSON summary
 SUMMARY_PREFIXES = ("campaign_engine", "campaign_churn", "campaign_resume",
                     "scale_engine", "scale_campaign_cell",
-                    "campaign_parallel", "report_suite", "bench_batched")
+                    "campaign_parallel", "report_suite", "bench_batched",
+                    "bench_service")
 
 
 def write_json(path: str, rows, failures: int, full: bool) -> None:

@@ -19,7 +19,13 @@ and exits non-zero when:
   5. a ``campaign_resume[overhead]`` cell is present but the cell
      journal's overhead exceeded 5% of campaign wall time, or resuming a
      completed journal stopped reproducing the fresh run bit-identically
-     (the PR 7 fault-tolerance gates; older recordings tolerated).
+     (the PR 7 fault-tolerance gates; older recordings tolerated), or
+  6. a ``bench_service`` cell is present but ``replay_identical`` is
+     false — the scheduler service's event loop diverged from offline
+     ``simulate()`` — or ``meets_service_p99_bound`` is false — the
+     client-observed placement p99 under load exceeded its recorded
+     bound (the ISSUE 8 online-service gates; older recordings
+     tolerated).
 
 Run: python scripts/bench_gate.py [PATH]   (or: make bench-gate)
 """
@@ -85,6 +91,20 @@ def main() -> int:
             errors.append(
                 f"{name}: resuming a completed journal no longer "
                 f"reproduces the fresh run bit-identically")
+        # bench_service cells gate only when present (PR 8+): the online
+        # service must stay bit-identical to offline simulate() and keep
+        # its placement tail-latency bound under concurrent load
+        if "replay_identical" in row and not row["replay_identical"]:
+            errors.append(
+                f"{name}: service event loop no longer replays "
+                f"bit-identically to offline simulate()")
+        if "meets_service_p99_bound" in row \
+                and not row["meets_service_p99_bound"]:
+            errors.append(
+                f"{name}: placement p99 {row.get('place_p99_ms')}ms "
+                f"above the {row.get('p99_bound_ms')}ms bound "
+                f"({row.get('queries')} queries over "
+                f"{row.get('connections')} connections)")
 
     if errors:
         print("bench-gate: FAILED")

@@ -3,7 +3,7 @@
 
 Checks:
   1. required docs exist (README, docs/{architecture,simulator,batched,
-     strategies,events,reproduction,robustness,results}.md)
+     strategies,events,reproduction,robustness,service,results}.md)
   2. every `src/...` path mentioned in them exists on disk
   3. relative markdown links resolve
   4. the README strategy glossary covers every simulator strategy
@@ -25,7 +25,8 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parent.parent
 DOCS = ["README.md", "docs/architecture.md", "docs/simulator.md",
         "docs/batched.md", "docs/strategies.md", "docs/events.md",
-        "docs/reproduction.md", "docs/robustness.md", "docs/results.md"]
+        "docs/reproduction.md", "docs/robustness.md", "docs/service.md",
+        "docs/results.md"]
 
 errors: list[str] = []
 

@@ -45,8 +45,8 @@ fragmentation measure the simulator samples over time (``frag_series``).
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Iterable, List
+from dataclasses import asdict, dataclass
+from typing import Dict, Iterable, List
 
 from .topology import ClusterSpec, FabricState
 
@@ -89,6 +89,18 @@ class ClusterEvent:
             raise ValueError(f"event time must be >= 0 (got {self.time})")
         if self.restart_iters < 0:
             raise ValueError("restart_iters must be >= 0")
+
+    # -- JSON round-trip (scheduler-service event log) ----------------------
+    def to_json(self) -> Dict:
+        """Plain-dict form for the service event log.  Floats survive via
+        JSON's shortest-round-trip repr, so ``from_json(to_json(ev)) == ev``
+        bit-exactly — the replay/restart contract (docs/service.md) needs
+        the replayed event stream to be *identical*, not approximately so."""
+        return asdict(self)
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "ClusterEvent":
+        return cls(**d)
 
 
 def validate_events(events: Iterable[ClusterEvent],

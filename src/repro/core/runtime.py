@@ -203,34 +203,38 @@ class JournalMismatch(ValueError):
     """The journal on disk was written for a different campaign."""
 
 
-class CellJournal:
-    """Append-only JSONL journal of completed campaign cells.
+class LineJournal:
+    """Generic append-only JSONL journal: schema-fingerprinted header +
+    one record per line, flushed line-atomically.
 
-    Line 1 is a ``header`` record carrying the campaign *schema* (grid
-    axes, cluster dims, store mode, per-slice trace fingerprints, the
-    result-affecting config knobs).  Every subsequent line is one ``cell``
-    record: the cell key, its wall time, and the **exact**
-    :meth:`MetricsReport.to_journal` payload — floats survive JSON via
-    shortest-round-trip repr, so a loaded report is bit-identical to the
-    simulated one.
+    This is the shared durability layer behind :class:`CellJournal`
+    (campaign cells) and the scheduler daemon's event log
+    (``repro.service.state.ServiceLog``).  The contract both inherit:
 
-    Durability contract: records are flushed line-atomically after every
-    cell.  A crash can at worst leave one torn trailing line, which
-    :meth:`resume` detects and drops (that cell is simply re-simulated).
-    A torn line anywhere *else* means external corruption and raises.
-
-    The simulator engine is deliberately **not** part of the schema:
-    v1/v2/batched are bit-identical by contract (``tests/test_batched.py``,
-    ``tests/test_campaign.py``), so a journal written under one engine may
-    be resumed under another."""
+    * line 1 is a ``header`` record carrying a *schema* dict; resuming
+      validates it so a journal can never be replayed into a run it was
+      not written for,
+    * every :meth:`append_record` is one ``json.dumps(..., sort_keys=True)``
+      line followed by ``flush()`` — a process crash can at worst leave one
+      torn trailing line, which :meth:`open_resume` detects and truncates
+      (a torn line anywhere *else* means external corruption and raises),
+    * ``fsync=True`` additionally ``os.fsync``\\ s after every flush,
+      hardening the log against kernel panics / power loss at the cost of
+      one disk barrier per record.  Campaign journals default it off (a
+      lost tail record just re-simulates); the scheduler service event log
+      turns it on (a lost record there is an acknowledged client request).
+    """
 
     VERSION = 1
+    #: label used in the no-header error ("not a campaign journal")
+    _LABEL = "campaign"
 
-    def __init__(self, path: str, schema: Dict, fh):
+    def __init__(self, path: str, schema: Dict, fh, fsync: bool = False):
         self.path = path
         self.schema = schema
         self._fh = fh
-        # cumulative wall time spent serialising + writing cell records;
+        self.fsync = fsync
+        # cumulative wall time spent serialising + writing records;
         # the ≤5% overhead gate (benchmarks/bench_campaign.py) reads this
         # so the measurement is immune to run-to-run machine noise
         self.io_seconds = 0.0
@@ -242,8 +246,13 @@ class CellJournal:
         # (tuples -> lists, int-vs-float untouched)
         return json.loads(json.dumps(schema, sort_keys=True))
 
+    def _sync(self) -> None:
+        if self.fsync:
+            os.fsync(self._fh.fileno())
+
     @classmethod
-    def create(cls, path: str, schema: Dict) -> "CellJournal":
+    def create(cls, path: str, schema: Dict,
+               fsync: bool = False) -> "LineJournal":
         if os.path.exists(path):
             raise ValueError(
                 f"journal {path!r} already exists; pass resume={path!r} to "
@@ -253,15 +262,16 @@ class CellJournal:
         fh.write(json.dumps({"kind": "header", "version": cls.VERSION,
                              "schema": schema}, sort_keys=True) + "\n")
         fh.flush()
-        return cls(path, schema, fh)
+        jr = cls(path, schema, fh, fsync=fsync)
+        jr._sync()
+        return jr
 
     @classmethod
-    def resume(cls, path: str, schema: Dict,
-               ) -> Tuple["CellJournal", Dict[CellKey, Tuple[MetricsReport,
-                                                             float]]]:
-        """Open an existing journal, validate its schema against the
-        current campaign, and return ``(journal, completed)`` where
-        ``completed`` maps cell keys to their journaled reports."""
+    def open_resume(cls, path: str, schema: Dict, fsync: bool = False,
+                    ) -> Tuple["LineJournal", List[Dict]]:
+        """Open an existing journal, validate its schema, and return
+        ``(journal, records)`` — the parsed body records (header excluded),
+        with any torn trailing line truncated off the file."""
         if not os.path.exists(path):
             raise ValueError(f"resume journal {path!r} does not exist; "
                              f"pass journal= for a fresh run")
@@ -283,7 +293,7 @@ class CellJournal:
                 except json.JSONDecodeError:
                     if n == len(segments) - 1:
                         # torn tail: the crash interrupted the final append —
-                        # drop it, that cell re-simulates
+                        # drop it, that record replays/re-simulates
                         torn_at = offset
                         break
                     raise ValueError(
@@ -292,8 +302,9 @@ class CellJournal:
             offset += len(seg) + 1
         if not records or records[0].get("kind") != "header":
             raise JournalMismatch(
-                f"journal {path!r} has no header record — not a campaign "
-                f"journal (or truncated before the first flush)")
+                f"journal {path!r} has no header record — not a "
+                f"{cls._LABEL} journal (or truncated before the first "
+                f"flush)")
         head = records[0]
         if head.get("version") != cls.VERSION:
             raise JournalMismatch(
@@ -304,17 +315,9 @@ class CellJournal:
             diffs = [k for k in sorted(set(theirs) | set(schema))
                      if theirs.get(k) != schema.get(k)]
             raise JournalMismatch(
-                f"journal {path!r} was written for a different campaign "
-                f"(differing schema keys: {', '.join(diffs)}); point "
-                f"resume= at the matching journal or start fresh")
-        completed: Dict[CellKey, Tuple[MetricsReport, float]] = {}
-        for rec in records[1:]:
-            if rec.get("kind") != "cell":
-                continue
-            s, q, load, seed = rec["cell"]
-            key = (str(s), str(q), float(load), int(seed))
-            completed[key] = (MetricsReport.from_journal(rec["report"]),
-                              float(rec["wall_time"]))
+                f"journal {path!r} was written for a different "
+                f"{cls._LABEL} (differing schema keys: {', '.join(diffs)}); "
+                f"point resume= at the matching journal or start fresh")
         if torn_at is not None:
             # chop the torn bytes off before reopening for append: without
             # this the next record would concatenate onto the partial line,
@@ -328,16 +331,15 @@ class CellJournal:
             # the next append starts a fresh line
             fh.write("\n")
             fh.flush()
-        return cls(path, schema, fh), completed
+        jr = cls(path, schema, fh, fsync=fsync)
+        return jr, records[1:]
 
     # -- appends ------------------------------------------------------------
-    def append(self, key: CellKey, report: MetricsReport,
-               wall_time: float) -> None:
+    def append_record(self, rec: Dict) -> None:
         t0 = time.perf_counter()
-        rec = {"kind": "cell", "cell": list(key), "wall_time": wall_time,
-               "report": report.to_journal()}
         self._fh.write(json.dumps(rec, sort_keys=True) + "\n")
         self._fh.flush()
+        self._sync()
         self.io_seconds += time.perf_counter() - t0
 
     def close(self) -> None:
@@ -346,6 +348,53 @@ class CellJournal:
                 self._fh.close()
             finally:
                 self._fh = None
+
+
+class CellJournal(LineJournal):
+    """Append-only JSONL journal of completed campaign cells.
+
+    Line 1 is a ``header`` record carrying the campaign *schema* (grid
+    axes, cluster dims, store mode, per-slice trace fingerprints, the
+    result-affecting config knobs).  Every subsequent line is one ``cell``
+    record: the cell key, its wall time, and the **exact**
+    :meth:`MetricsReport.to_journal` payload — floats survive JSON via
+    shortest-round-trip repr, so a loaded report is bit-identical to the
+    simulated one.
+
+    Durability contract: records are flushed line-atomically after every
+    cell (``fsync=True`` upgrades that to a disk barrier per record — see
+    :class:`LineJournal`).  A crash can at worst leave one torn trailing
+    line, which :meth:`resume` detects and drops (that cell is simply
+    re-simulated).
+
+    The simulator engine is deliberately **not** part of the schema:
+    v1/v2/batched are bit-identical by contract (``tests/test_batched.py``,
+    ``tests/test_campaign.py``), so a journal written under one engine may
+    be resumed under another."""
+
+    @classmethod
+    def resume(cls, path: str, schema: Dict, fsync: bool = False,
+               ) -> Tuple["CellJournal", Dict[CellKey, Tuple[MetricsReport,
+                                                             float]]]:
+        """Open an existing journal, validate its schema against the
+        current campaign, and return ``(journal, completed)`` where
+        ``completed`` maps cell keys to their journaled reports."""
+        jr, records = cls.open_resume(path, schema, fsync=fsync)
+        completed: Dict[CellKey, Tuple[MetricsReport, float]] = {}
+        for rec in records:
+            if rec.get("kind") != "cell":
+                continue
+            s, q, load, seed = rec["cell"]
+            key = (str(s), str(q), float(load), int(seed))
+            completed[key] = (MetricsReport.from_journal(rec["report"]),
+                              float(rec["wall_time"]))
+        return jr, completed
+
+    def append(self, key: CellKey, report: MetricsReport,
+               wall_time: float) -> None:
+        self.append_record({"kind": "cell", "cell": list(key),
+                            "wall_time": wall_time,
+                            "report": report.to_journal()})
 
 
 # ---------------------------------------------------------------------------

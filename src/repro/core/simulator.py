@@ -1182,6 +1182,15 @@ class ClusterSimulator:
             self._ops = (self._remove_running_v2, self._add_running_v2,
                          self._try_schedule_v2, self._recompute_rates_v2)
             self._run_v2(list(jobs), max_time)
+        return self.build_report(jobs)
+
+    def build_report(self, jobs: Sequence[Job]) -> MetricsReport:
+        """Metrics for ``jobs`` (arrival order) against this simulator's
+        accumulated counters.  Shared by :meth:`run` and the online
+        scheduler service (``repro.service``), whose differential replay
+        oracle compares the two reports field-for-field — any report
+        assembly living in only one of the paths would silently weaken
+        that bit-identity check."""
         rep = job_metrics(jobs)
         rep.frag_gpu = sum(1 for r in self.frag_reason.values() if r == "gpu")
         rep.frag_network = sum(1 for r in self.frag_reason.values()

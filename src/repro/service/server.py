@@ -1,0 +1,252 @@
+"""Scheduler daemon: JSON-lines-over-TCP front end (stdlib asyncio only).
+
+Protocol — one JSON object per line in each direction:
+
+    -> {"id": 7, "op": "submit", "tenant": "ml-infra",
+        "job": {"model": "resnet50", "num_gpus": 16, "num_iters": 4000}}
+    <- {"id": 7, "ok": true, "result": {"job_id": 42, "admitted": true,
+        "placed": true, "gpus": [...], ...}}
+
+Errors never tear the connection: a malformed or rejected request gets
+``{"ok": false, "error": "..."}`` and the session continues.  Requests on
+one connection are handled in order; state mutations all happen on the
+event-loop thread, so no locking exists anywhere in the service.
+
+Operations (``op``):
+
+==========  =============================================================
+``submit``  admit + enqueue a job at virtual time ``t`` (default: now);
+            placement happens immediately when capacity allows
+``place``   pure query: where would this job go right now (no commit)
+``whatif``  digital-twin prediction (see :mod:`repro.service.twin`)
+``admit``   dry-run admission decision for (tenant, num_gpus)
+``stats``   live counters: clock, version, occupancy, tenants, twin cache
+``event``   ingest a churn event (preempt / fail / recover / resize)
+``advance`` move the virtual clock, returning completions on the way
+``drain``   run every pending completion
+``shutdown`` acknowledge, then stop the server loop cleanly
+==========  =============================================================
+
+This daemon schedules *training jobs onto the cluster*; it is unrelated
+to ``repro.launch.serve``, which decodes trained models for inference.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import json
+import threading
+import time
+from typing import Dict, Optional, Tuple
+
+from ..core.events import ClusterEvent
+from .state import LiveCluster, job_from_json
+from .twin import DigitalTwin
+
+__all__ = ["SchedulerService", "serve", "run_server", "ServerThread"]
+
+
+class SchedulerService:
+    """Protocol dispatcher over one LiveCluster + DigitalTwin.
+
+    ``handle`` is a plain synchronous function ``dict -> dict`` — the TCP
+    layer below is a thin shell around it, and tests/benchmarks can drive
+    the full protocol without sockets."""
+
+    def __init__(self, live: LiveCluster, twin: Optional[DigitalTwin] = None):
+        self.live = live
+        self.twin = twin or DigitalTwin(live)
+        self.requests = 0
+        self.errors = 0
+        self.shutdown_requested = False
+        self._started = time.perf_counter()
+
+    # -- request plumbing ---------------------------------------------------
+    def handle(self, req: Dict) -> Dict:
+        rid = req.get("id") if isinstance(req, dict) else None
+        self.requests += 1
+        try:
+            if not isinstance(req, dict):
+                raise ValueError("request must be a JSON object")
+            op = req.get("op")
+            fn = getattr(self, f"_op_{op}", None)
+            if op is None or fn is None:
+                raise ValueError(f"unknown op {op!r}")
+            resp = {"ok": True, "result": fn(req)}
+        except Exception as e:
+            self.errors += 1
+            resp = {"ok": False, "error": f"{type(e).__name__}: {e}"}
+        if rid is not None:
+            resp["id"] = rid
+        return resp
+
+    @staticmethod
+    def _job_fields(req: Dict) -> Dict:
+        job = req.get("job")
+        if not isinstance(job, dict) or "model" not in job \
+                or "num_gpus" not in job or "num_iters" not in job:
+            raise ValueError("request needs a job object with at least "
+                             "model / num_gpus / num_iters")
+        return job
+
+    # -- operations ---------------------------------------------------------
+    def _op_submit(self, req: Dict) -> Dict:
+        f = self._job_fields(req)
+        job = self.live.new_job(
+            model=f["model"], num_gpus=int(f["num_gpus"]),
+            num_iters=int(f["num_iters"]),
+            batch_size=f.get("batch_size"),
+            arrival=req.get("t"),
+            allreduce_algo=f.get("allreduce_algo", "ring"),
+            deadline=f.get("deadline"))
+        return self.live.submit(job, tenant=req.get("tenant", "default"))
+
+    def _op_place(self, req: Dict) -> Dict:
+        f = self._job_fields(req)
+        probe = self.live.new_job(
+            model=f["model"], num_gpus=int(f["num_gpus"]),
+            num_iters=int(f["num_iters"]),
+            batch_size=f.get("batch_size"),
+            allreduce_algo=f.get("allreduce_algo", "ring"))
+        return self.live.probe_place(probe)
+
+    def _op_whatif(self, req: Dict) -> Dict:
+        f = self._job_fields(req)
+        return self.twin.whatif(
+            model=f["model"], num_gpus=int(f["num_gpus"]),
+            num_iters=int(f["num_iters"]),
+            batch_size=f.get("batch_size"),
+            allreduce_algo=f.get("allreduce_algo", "ring"),
+            strategies=req.get("strategies"),
+            horizon=req.get("horizon"))
+
+    def _op_admit(self, req: Dict) -> Dict:
+        ok, reason = self.live.admission(req.get("tenant", "default"),
+                                         int(req.get("num_gpus", 0)))
+        return {"admit": ok, "reason": reason}
+
+    def _op_stats(self, req: Dict) -> Dict:
+        out = self.live.stats()
+        out["twin"] = self.twin.stats()
+        out["requests"] = self.requests
+        out["errors"] = self.errors
+        out["uptime_s"] = round(time.perf_counter() - self._started, 3)
+        return out
+
+    def _op_event(self, req: Dict) -> Dict:
+        ev = req.get("event")
+        if not isinstance(ev, dict):
+            raise ValueError("event op needs an event object "
+                             "(ClusterEvent fields)")
+        return self.live.ingest(ClusterEvent.from_json(ev))
+
+    def _op_advance(self, req: Dict) -> Dict:
+        done = self.live.advance(float(req["t"]))
+        return {"t": self.live.now,
+                "completed": [[jid, tf] for jid, tf in done]}
+
+    def _op_drain(self, req: Dict) -> Dict:
+        done = self.live.drain_all()
+        return {"t": self.live.now,
+                "completed": [[jid, tf] for jid, tf in done]}
+
+    def _op_shutdown(self, req: Dict) -> Dict:
+        self.shutdown_requested = True
+        return {"stopping": True}
+
+
+# ---------------------------------------------------------------------------
+# asyncio shell
+# ---------------------------------------------------------------------------
+
+async def serve(service: SchedulerService, host: str = "127.0.0.1",
+                port: int = 0, ready=None) -> None:
+    """Run the TCP front end until a client requests ``shutdown``.
+
+    ``ready(port)`` is called once the socket is listening (port 0 binds an
+    ephemeral port — tests, the smoke script, and the load bench all use
+    that to avoid collisions)."""
+    stop = asyncio.Event()
+
+    async def on_connection(reader: asyncio.StreamReader,
+                            writer: asyncio.StreamWriter) -> None:
+        try:
+            while True:
+                try:
+                    line = await reader.readline()
+                except ConnectionError:
+                    break
+                if not line:
+                    break
+                try:
+                    req = json.loads(line)
+                except json.JSONDecodeError as e:
+                    resp = {"ok": False, "error": f"bad JSON: {e}"}
+                else:
+                    resp = service.handle(req)
+                writer.write((json.dumps(resp, sort_keys=True)
+                              + "\n").encode())
+                try:
+                    await writer.drain()
+                except ConnectionError:
+                    break
+                if service.shutdown_requested:
+                    stop.set()
+                    break
+        finally:
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
+
+    server = await asyncio.start_server(on_connection, host, port)
+    bound = server.sockets[0].getsockname()[1]
+    if ready is not None:
+        ready(bound)
+    try:
+        await stop.wait()
+    finally:
+        server.close()
+        await server.wait_closed()
+        service.live.close()
+
+
+def run_server(service: SchedulerService, host: str = "127.0.0.1",
+               port: int = 0, ready=None) -> None:
+    """Blocking entry point (the ``schedd serve`` CLI)."""
+    asyncio.run(serve(service, host, port, ready=ready))
+
+
+class ServerThread:
+    """Daemon-thread harness around :func:`serve` for tests, the smoke
+    script, and the load benchmark: start, read the bound port, drive it
+    with clients, stop via the ``shutdown`` op (or :meth:`stop`)."""
+
+    def __init__(self, service: SchedulerService, host: str = "127.0.0.1",
+                 port: int = 0):
+        self.service = service
+        self.host = host
+        self._ready = threading.Event()
+        self.port: Optional[int] = None
+
+        def _ready_cb(bound: int) -> None:
+            self.port = bound
+            self._ready.set()
+
+        self.thread = threading.Thread(
+            target=run_server, args=(service, host, port),
+            kwargs={"ready": _ready_cb}, daemon=True)
+
+    def start(self, timeout: float = 10.0) -> Tuple[str, int]:
+        self.thread.start()
+        if not self._ready.wait(timeout):
+            raise RuntimeError("scheduler service did not come up "
+                               f"within {timeout}s")
+        return self.host, self.port
+
+    def join(self, timeout: float = 10.0) -> None:
+        self.thread.join(timeout)
+        if self.thread.is_alive():
+            raise RuntimeError("scheduler service did not shut down "
+                               f"within {timeout}s")

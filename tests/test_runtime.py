@@ -208,6 +208,39 @@ def test_journal_missing_final_newline_restored(tmp_path):
                               ("sr", "fifo", 120.0, 0)}
 
 
+def test_journal_fsync_opt_in(tmp_path, monkeypatch):
+    """``fsync=True`` (ISSUE 8: the scheduler-service event log) must
+    fsync once per appended record — and per the header — while the
+    default flush-only mode never calls fsync at all."""
+    calls = []
+    real_fsync = os.fsync
+    monkeypatch.setattr(os, "fsync",
+                        lambda fd: (calls.append(fd), real_fsync(fd))[1])
+    rep = MetricsReport(1.0, 2.0, 3.0, 0.0, 0.0, 1)
+
+    jr = CellJournal.create(str(tmp_path / "flush.jsonl"), {"v": 1})
+    jr.append(("ecmp", "fifo", 120.0, 0), rep, 0.5)
+    jr.close()
+    assert calls == []                          # default: flush, no fsync
+
+    jr = CellJournal.create(str(tmp_path / "sync.jsonl"), {"v": 1},
+                            fsync=True)
+    assert len(calls) == 1                      # header synced
+    jr.append(("ecmp", "fifo", 120.0, 0), rep, 0.5)
+    jr.append(("sr", "fifo", 120.0, 0), rep, 0.5)
+    assert len(calls) == 3                      # one per record
+    jr.close()
+
+    # resume keeps the knob
+    jr2, completed = CellJournal.resume(str(tmp_path / "sync.jsonl"),
+                                        {"v": 1}, fsync=True)
+    assert len(completed) == 2
+    n = len(calls)
+    jr2.append(("ecmp", "ff", 120.0, 0), rep, 0.5)
+    assert len(calls) == n + 1
+    jr2.close()
+
+
 # ---------------------------------------------------------------------------
 # serial campaigns: resume bit-identity, retries, quarantine
 # ---------------------------------------------------------------------------
