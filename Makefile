@@ -2,9 +2,9 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-fast test-batched test-chaos bench-smoke bench bench-gate \
-        docs-lint docs-lint-fast check report report-smoke report-paper \
-        examples-smoke service-smoke
+.PHONY: test test-fast test-batched test-chaos test-traces bench-smoke \
+        bench bench-gate docs-lint docs-lint-fast check report report-smoke \
+        report-paper examples-smoke service-smoke
 
 test:            ## tier-1 verification (what CI gates on) — the full suite
 	$(PY) -m pytest -x -q
@@ -18,11 +18,14 @@ test-batched:    ## lane-engine differential suite incl. slow parity sweeps (doc
 test-chaos:      ## fault-tolerant runtime: crash/hang/flaky recovery + bit-identical resume (docs/robustness.md)
 	$(PY) -m pytest -x -q tests/test_runtime.py
 
+test-traces:     ## trace-ingestion contract suite: adapters, streaming, windows (docs/traces.md)
+	$(PY) -m pytest -x -q tests/test_traces.py
+
 bench-smoke:     ## ~60s campaign smoke: v2-vs-v1 speedup, JCT identity, parallel path
 	$(PY) -m benchmarks.bench_campaign
 
-bench-json:      ## campaign + batched + scale + fairshare + report + service benches -> BENCH_campaign.json (+ gate)
-	$(PY) -m benchmarks.run --only campaign,batched,scale,fairshare,report,service --json
+bench-json:      ## campaign + batched + scale + fairshare + report + service + traces benches -> BENCH_campaign.json (+ gate)
+	$(PY) -m benchmarks.run --only campaign,batched,scale,fairshare,report,service,traces --json
 	$(PY) scripts/bench_gate.py
 
 bench-gate:      ## fail if the committed BENCH_campaign.json lost the 5x target
@@ -52,7 +55,7 @@ service-smoke:   ## scheduler daemon end-to-end: TCP session, quotas, what-if, l
 # check runs docs-lint with --no-results: report-smoke already rebuilds the
 # smoke figure suite and byte-compares the gallery, so the drift check runs
 # exactly once per check (standalone `make docs-lint` keeps the full set)
-check: docs-lint-fast bench-gate examples-smoke service-smoke report-smoke test-fast test-batched test-chaos   ## lint + perf gate + fast tests (full tier-1: make test)
+check: docs-lint-fast bench-gate examples-smoke service-smoke report-smoke test-fast test-batched test-chaos test-traces   ## lint + perf gate + fast tests (full tier-1: make test)
 
 docs-lint-fast:
 	$(PY) scripts/docs_lint.py --no-results

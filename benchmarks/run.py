@@ -33,6 +33,7 @@ MODULES = [
     ("fairshare", "benchmarks.bench_fairshare"),
     ("report", "benchmarks.bench_report"),
     ("service", "benchmarks.bench_service"),
+    ("traces", "benchmarks.bench_traces"),
     ("roofline", "benchmarks.roofline"),
 ]
 
@@ -40,7 +41,7 @@ MODULES = [
 SUMMARY_PREFIXES = ("campaign_engine", "campaign_churn", "campaign_resume",
                     "scale_engine", "scale_campaign_cell",
                     "campaign_parallel", "report_suite", "bench_batched",
-                    "bench_service")
+                    "bench_service", "bench_traces")
 
 
 def write_json(path: str, rows, failures: int, full: bool) -> None:

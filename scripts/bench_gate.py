@@ -25,6 +25,12 @@ and exits non-zero when:
      ``simulate()`` — or ``meets_service_p99_bound`` is false — the
      client-observed placement p99 under load exceeded its recorded
      bound (the ISSUE 8 online-service gates; older recordings
+     tolerated), or
+  7. a ``bench_traces`` cell is present but ``stream_eq_eager`` is
+     false — the streaming trace reader diverged from the eager loader
+     on a shared prefix — or ``rss_within_bound`` is false — the
+     million-job windowed replay's peak RSS exceeded its recorded bound
+     (the trace-ingestion gates, docs/traces.md; older recordings
      tolerated).
 
 Run: python scripts/bench_gate.py [PATH]   (or: make bench-gate)
@@ -105,6 +111,18 @@ def main() -> int:
                 f"above the {row.get('p99_bound_ms')}ms bound "
                 f"({row.get('queries')} queries over "
                 f"{row.get('connections')} connections)")
+        # bench_traces cells gate only when present (ISSUE 9+): streaming
+        # ingestion must match the eager loader and stay inside its
+        # recorded peak-RSS bound on the million-job windowed replay
+        if "stream_eq_eager" in row and not row["stream_eq_eager"]:
+            errors.append(
+                f"{name}: streaming trace reader no longer matches the "
+                f"eager loader on a shared prefix")
+        if "rss_within_bound" in row and not row["rss_within_bound"]:
+            errors.append(
+                f"{name}: windowed million-job replay peak RSS "
+                f"{row.get('peak_rss_mb')}MB above the "
+                f"{row.get('rss_bound_mb')}MB bound")
 
     if errors:
         print("bench-gate: FAILED")

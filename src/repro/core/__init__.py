@@ -13,6 +13,7 @@ Layers:
   fairshare  — max-min fair water-filling (numpy + JAX)
   jobs       — DML workload profiles + dataset generators
   workloads  — reproducible Poisson/CSV arrival traces for campaigns
+  traces     — real-trace ingestion: adapters, streaming reader, windows
   simulator  — event-driven flow-level cluster simulator (incremental rates)
   runtime    — fault-tolerant cell execution: retries, timeouts, journal
   campaign   — strategy × policy × load × seed sweep driver + aggregation
@@ -55,8 +56,14 @@ from .runtime import (CampaignError, CellJournal, CellOutcome, CellRunner,
                       atomic_write_text, backoff_delay, classify_exception,
                       trace_fingerprint)
 from .simulator import STRATEGIES, ClusterSimulator, simulate
+from .traces import (ADAPTERS, TRACE_FORMATS, AlibabaAdapter,
+                     GenericCSVAdapter, JobIdInterner, NativeCSVAdapter,
+                     TraceAdapter, TraceFormatError, TraceSource,
+                     TraceSummary, TraceWindow, detect_format,
+                     empirical_size_mix, fit_workload, iter_windows,
+                     iters_for_duration, stable_model_for, summarize_jobs)
 from .campaign import (AGGREGATE_COLUMNS, CampaignGrid, CampaignResult,
-                       CellResult, run_campaign)
+                       CellResult, run_campaign, run_windowed_campaign)
 from .figures import (FIGURES, FigureSpec, FigureTable, build_all,
                       build_figure, figure_names, qualitative_checks)
 from .scheduler import (Grant, IsolatedScheduler, QUEUE_POLICIES, order_queue)

@@ -532,3 +532,78 @@ def run_campaign(spec: ClusterSpec, grid: CampaignGrid,
     result.failed_cells = [failed[i] for i in sorted(failed)]
     result.wall_time = time.time() - t0
     return result
+
+
+def run_windowed_campaign(spec: ClusterSpec, grid: CampaignGrid,
+                          source: "TraceSource | str",
+                          window_jobs: int,
+                          stride_jobs: Optional[int] = None,
+                          max_windows: Optional[int] = None,
+                          *,
+                          engine: Optional[str] = None,
+                          workers: Optional[int] = None,
+                          store: Optional[str] = None,
+                          ocs_spec: Optional[ClusterSpec] = None,
+                          progress: Optional[Callable[[str], None]] = None,
+                          config: Optional[SimConfig] = None,
+                          ) -> CampaignResult:
+    """Replay a long (possibly million-job) trace as overlapping windows.
+
+    The trace streams through :meth:`repro.core.traces.TraceSource.iter_jobs`
+    and :func:`repro.core.traces.iter_windows` — at no point is the whole
+    job list resident; memory is bounded by the reorder buffer plus the
+    open windows (≤ ``ceil(window_jobs / stride_jobs)`` buffers of
+    ``window_jobs`` jobs).  Each window becomes one ``seeds``-axis slice of
+    the merged :class:`CampaignResult`: the grid's seeds axis is
+    **repurposed as the window index** (arrivals are rebased to 0 per
+    window, so windows are exchangeable replicas of the arrival process),
+    which makes :meth:`CampaignResult.aggregate` pool across windows
+    exactly as it pools across seeds.  Cells default to ``store="stream"``
+    so per-window metrics condense to bounded order statistics.
+
+    ``source`` — a :class:`repro.core.traces.TraceSource` or a path
+    (format auto-detected).  ``grid`` must have single-entry ``loads`` and
+    ``seeds`` axes (the trace fixes the arrival process; windows take over
+    the seeds axis).  ``max_windows`` stops consuming the stream once the
+    requested windows closed — on a 1M-job trace with ``max_windows=10``
+    the reader never materialises more than the windowed span.
+    """
+    from .traces import TraceSource, iter_windows
+    if isinstance(source, (str, os.PathLike)):
+        source = TraceSource(str(source))
+    if len(grid.loads) > 1:
+        raise ValueError("a trace fixes the arrival process; use a "
+                         "single-entry loads axis")
+    if len(grid.seeds) != 1:
+        raise ValueError(
+            "windowed campaigns repurpose the seeds axis as the window "
+            "index; pass a single-entry seeds axis")
+    if store is None:
+        store = "stream" if config is None else None
+    t0 = time.time()
+    result = CampaignResult(spec=spec, grid=grid)
+    indices: List[int] = []
+    for win in iter_windows(source.iter_jobs(), window_jobs, stride_jobs,
+                            max_windows):
+        if progress is not None:
+            progress(f"[windowed] window {win.index}: {len(win.jobs)} jobs "
+                     f"from trace index {win.start} (t0={win.t0:g})")
+        wgrid = dataclasses.replace(grid, seeds=(win.index,))
+        wres = run_campaign(spec, wgrid, trace=list(win.jobs),
+                            engine=engine, workers=workers, store=store,
+                            ocs_spec=ocs_spec, progress=progress,
+                            config=config)
+        indices.append(win.index)
+        result.cells.extend(wres.cells)
+        result.failed_cells.extend(wres.failed_cells)
+        result.resumed_cells += wres.resumed_cells
+        for key, stats in wres.trace_info.items():
+            result.trace_info[f"window={win.index},{key}"] = stats
+    if not indices:
+        raise ValueError(
+            f"trace {source.path} produced no windows (is it empty?)")
+    # the merged grid's seeds axis records which windows actually ran, so
+    # missing_cells() stays honest for partial consumers
+    result.grid = dataclasses.replace(grid, seeds=tuple(indices))
+    result.wall_time = time.time() - t0
+    return result

@@ -61,6 +61,11 @@ class SimConfig:
     # campaign-only knobs
     workers: Optional[int] = None
     store: str = "full"
+    # trace-ingestion knob (repro.core.traces): which schema adapter reads
+    # an external --trace file — "auto" sniffs the header, or a registered
+    # adapter name ("csv", "alibaba", "generic"); synthetic workloads
+    # ignore it
+    trace_format: str = "auto"
     # fault-policy knobs (repro.core.runtime): per-cell wall-clock timeout
     # in seconds (0 disables; > 0 requires pool execution, so it forces the
     # worker-pool path even at workers=1), extra attempts granted to
@@ -84,6 +89,15 @@ class SimConfig:
         if self.store not in STORES:
             raise ValueError(f"unknown store mode {self.store!r}; "
                              f"choose 'full' or 'stream'")
+        if self.trace_format != "auto":
+            # deferred import: traces pulls in workloads, which this
+            # module must not load at import time
+            from .traces import ADAPTERS
+            if self.trace_format not in ADAPTERS:
+                raise ValueError(
+                    f"unknown trace format {self.trace_format!r}; choose "
+                    f"'auto' or one of {sorted(ADAPTERS)} "
+                    f"(docs/traces.md)")
         for ev in self.events:
             if not isinstance(ev, ClusterEvent):
                 raise TypeError(f"SimConfig.events needs ClusterEvent "

@@ -1163,7 +1163,11 @@ class ClusterSimulator:
     # -- entry point ---------------------------------------------------------
     def run(self, jobs: Sequence[Job],
             max_time: float = float("inf")) -> MetricsReport:
-        jobs = sorted(jobs, key=lambda j: j.arrival)
+        # job-id tie-break: coarse real-trace timestamps produce equal
+        # arrivals, and FIFO admission order must not depend on the
+        # caller's list order (synthetic traces are strictly increasing,
+        # so this is a no-op for them — the sort is stable)
+        jobs = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
         self.now = 0.0
         self._jobs_by_id = {j.job_id: j for j in jobs}
         if self.engine == "batched":

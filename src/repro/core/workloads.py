@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import csv
 import dataclasses
+import math
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
@@ -238,9 +239,88 @@ def save_trace_csv(jobs: Sequence[Job], path: str) -> None:
                         "" if j.deadline is None else repr(j.deadline)])
 
 
+def parse_trace_time(raw: str, field: str, path: str, ln: int,
+                     allow_none: bool = False) -> Optional[float]:
+    """One timestamp cell → validated float.  Rejects ``nan``/``inf`` and
+    negative values: a non-finite arrival poisons the v2 completion heap's
+    ``(t_fin, order)`` total order (every comparison against ``nan`` is
+    False, so heap invariants silently break) and a negative one would
+    predate the simulation clock's origin.  Shared by
+    :func:`load_trace_csv` and the :mod:`repro.core.traces` adapters so
+    every ingestion path enforces the same contract with the same
+    ``trace {path}:{ln}:`` error style."""
+    raw = (raw or "").strip()
+    if not raw:
+        if allow_none:
+            return None
+        raise ValueError(f"trace {path}:{ln}: empty {field}")
+    try:
+        val = float(raw)
+    except ValueError:
+        raise ValueError(f"trace {path}:{ln}: {field} {raw!r} is not a "
+                         f"number") from None
+    if not math.isfinite(val):
+        raise ValueError(f"trace {path}:{ln}: {field} must be finite "
+                         f"(got {raw!r}; non-finite values break the "
+                         f"completion-heap ordering)")
+    if val < 0:
+        raise ValueError(f"trace {path}:{ln}: {field} must be >= 0 "
+                         f"(got {raw!r})")
+    return val
+
+
+def job_from_trace_row(row: Dict[str, str], path: str, ln: int,
+                       seen_ids: set) -> Job:
+    """Validate one ``TRACE_FIELDS`` CSV row into a :class:`Job`.
+
+    The single row contract behind :func:`load_trace_csv` and the
+    streaming ``csv`` adapter of :mod:`repro.core.traces` — both paths
+    produce bit-identical jobs because both call exactly this."""
+    if any(row.get(f) is None for f in TRACE_FIELDS):
+        short = [f for f in TRACE_FIELDS if row.get(f) is None]
+        raise ValueError(f"trace {path}:{ln}: row is missing "
+                         f"values for {short}")
+    jid = int(row["job_id"])
+    if jid in seen_ids:
+        raise ValueError(f"trace {path}:{ln}: duplicate job_id {jid}"
+                         " (the simulator keys running jobs by id)")
+    seen_ids.add(jid)
+    model = row["model"]
+    if model not in PROFILES:
+        raise ValueError(f"trace {path}:{ln}: unknown model {model!r}")
+    algo = row["allreduce_algo"] or "ring"
+    if algo not in ALLREDUCE_ALGOS:
+        raise ValueError(f"trace {path}:{ln}: unknown allreduce "
+                         f"algorithm {algo!r}")
+    num_gpus = int(row["num_gpus"])
+    num_iters = int(row["num_iters"])
+    batch_size = int(row["batch_size"])
+    if num_gpus < 1:
+        raise ValueError(f"trace {path}:{ln}: num_gpus must be "
+                         f"positive (got {num_gpus})")
+    if num_iters < 1:
+        raise ValueError(f"trace {path}:{ln}: num_iters must be "
+                         f"positive (got {num_iters})")
+    if batch_size < 1:
+        raise ValueError(f"trace {path}:{ln}: batch_size must be "
+                         f"positive (got {batch_size}; it scales "
+                         f"per-iteration compute time)")
+    arrival = parse_trace_time(row["arrival"], "arrival", path, ln)
+    deadline = parse_trace_time(row["deadline"], "deadline", path, ln,
+                                allow_none=True)
+    return Job(jid, model, num_gpus, batch_size, arrival, num_iters,
+               allreduce_algo=algo, deadline=deadline)
+
+
 def load_trace_csv(path: str) -> List[Job]:
     """Load an external arrival trace. Validates models/algorithms so typos
-    in hand-written traces fail loudly instead of KeyError-ing mid-run."""
+    in hand-written traces fail loudly instead of KeyError-ing mid-run.
+
+    Jobs are returned in ``(arrival, job_id)`` order: coarse real-trace
+    timestamps (Philly-style minute granularity) produce equal arrivals,
+    and a plain arrival sort would leave their relative order to the
+    file's row order — the job-id tie-break makes replay deterministic
+    regardless of how the trace was written."""
     jobs: List[Job] = []
     seen_ids: set = set()
     with open(path, newline="") as f:
@@ -249,36 +329,8 @@ def load_trace_csv(path: str) -> List[Job]:
         if missing:
             raise ValueError(f"trace {path}: missing columns {sorted(missing)}")
         for ln, row in enumerate(reader, start=2):
-            if any(row.get(f) is None for f in TRACE_FIELDS):
-                short = [f for f in TRACE_FIELDS if row.get(f) is None]
-                raise ValueError(f"trace {path}:{ln}: row is missing "
-                                 f"values for {short}")
-            jid = int(row["job_id"])
-            if jid in seen_ids:
-                raise ValueError(f"trace {path}:{ln}: duplicate job_id {jid}"
-                                 " (the simulator keys running jobs by id)")
-            seen_ids.add(jid)
-            model = row["model"]
-            if model not in PROFILES:
-                raise ValueError(f"trace {path}:{ln}: unknown model {model!r}")
-            algo = row["allreduce_algo"] or "ring"
-            if algo not in ALLREDUCE_ALGOS:
-                raise ValueError(f"trace {path}:{ln}: unknown allreduce "
-                                 f"algorithm {algo!r}")
-            num_gpus = int(row["num_gpus"])
-            num_iters = int(row["num_iters"])
-            if num_gpus < 1:
-                raise ValueError(f"trace {path}:{ln}: num_gpus must be "
-                                 f"positive (got {num_gpus})")
-            if num_iters < 1:
-                raise ValueError(f"trace {path}:{ln}: num_iters must be "
-                                 f"positive (got {num_iters})")
-            deadline = row["deadline"].strip()
-            jobs.append(Job(jid, model, num_gpus,
-                            int(row["batch_size"]), float(row["arrival"]),
-                            num_iters, allreduce_algo=algo,
-                            deadline=float(deadline) if deadline else None))
-    jobs.sort(key=lambda j: j.arrival)
+            jobs.append(job_from_trace_row(row, path, ln, seen_ids))
+    jobs.sort(key=lambda j: (j.arrival, j.job_id))
     return jobs
 
 
@@ -287,7 +339,15 @@ def load_trace_csv(path: str) -> List[Job]:
 # ---------------------------------------------------------------------------
 
 def trace_stats(jobs: Sequence[Job]) -> Dict[str, float]:
-    """Arrival-rate / demand summary used by tests and campaign logs."""
+    """Arrival-rate / demand summary used by tests and campaign logs.
+
+    ``arrival_rate`` is ``(n - 1) / span`` — jobs per second over the
+    observed arrival span.  A zero-length span (a single job, or a
+    coarse-timestamp trace where every arrival ties) carries no rate
+    information, so it reports **0.0** — the same value the single-job
+    path reports — never ``inf``: downstream λ estimates
+    (``1 / arrival_rate`` guards aside) and JSON serialisation both
+    choke on infinities."""
     if not jobs:
         return {"n": 0, "arrival_rate": 0.0, "mean_interarrival": 0.0,
                 "mean_gpus": 0.0, "gpu_seconds": 0.0}
@@ -296,7 +356,7 @@ def trace_stats(jobs: Sequence[Job]) -> Dict[str, float]:
     gaps = np.diff(arrivals)
     return {
         "n": len(jobs),
-        "arrival_rate": (len(jobs) - 1) / span if span > 0 else float("inf"),
+        "arrival_rate": (len(jobs) - 1) / span if span > 0 else 0.0,
         "mean_interarrival": float(gaps.mean()) if len(gaps) else 0.0,
         "mean_gpus": float(np.mean([j.num_gpus for j in jobs])),
         "gpu_seconds": float(sum(j.num_gpus * j.ideal_runtime()

@@ -115,9 +115,9 @@ def cluster_presets():
 
 
 def campaign_main(argv) -> None:
-    from repro.core import (ENGINES, CampaignGrid, SimConfig, WorkloadSpec,
-                            load_trace_csv, registered_strategies,
-                            run_campaign)
+    from repro.core import (ENGINES, CampaignGrid, SimConfig, TraceSource,
+                            WorkloadSpec, registered_strategies,
+                            run_campaign, run_windowed_campaign)
 
     clusters = cluster_presets()
     ap = argparse.ArgumentParser(
@@ -157,6 +157,23 @@ def campaign_main(argv) -> None:
     ap.add_argument("--trace", default=None,
                     help="CSV arrival trace to replay instead of a "
                          "synthetic workload (see repro.core.workloads)")
+    ap.add_argument("--trace-format", default="auto",
+                    choices=("auto", "csv", "alibaba", "generic"),
+                    help="trace schema adapter: auto sniffs the header; "
+                         "csv = native schema, alibaba = PAI task "
+                         "taxonomy, generic = Philly/Helios-style column "
+                         "aliases (docs/traces.md)")
+    ap.add_argument("--window", type=int, default=None, metavar="JOBS",
+                    help="windowed replay: stream the trace as JOBS-job "
+                         "windows, one seeds-axis slice per window "
+                         "(bounded memory on million-job traces; "
+                         "requires --trace)")
+    ap.add_argument("--stride", type=int, default=None, metavar="JOBS",
+                    help="spacing between window starts (default: "
+                         "--window, i.e. non-overlapping windows)")
+    ap.add_argument("--max-windows", type=int, default=None, metavar="N",
+                    help="stop after N windows — the streaming reader "
+                         "never scans past the windowed span")
     ap.add_argument("--full-recompute", action="store_true",
                     help="use the full-recompute rate engine (debug)")
     ap.add_argument("--engine", default="v2", choices=ENGINES,
@@ -228,6 +245,31 @@ def campaign_main(argv) -> None:
         if clash:
             ap.error(f"--trace fixes the workload; {', '.join(clash)} "
                      "only shape synthetic traces and would be ignored")
+    else:
+        for flag, on in (("--trace-format", args.trace_format != "auto"),
+                         ("--window", args.window is not None),
+                         ("--stride", args.stride is not None),
+                         ("--max-windows", args.max_windows is not None)):
+            if on:
+                ap.error(f"{flag} only applies to trace replay; pass "
+                         f"--trace PATH")
+    if args.window is None:
+        if args.stride is not None or args.max_windows is not None:
+            ap.error("--stride/--max-windows only apply to windowed "
+                     "replay; pass --window JOBS")
+    else:
+        if args.window < 1:
+            ap.error(f"--window must be >= 1 job (got {args.window})")
+        if args.stride is not None and args.stride < 1:
+            ap.error(f"--stride must be >= 1 job (got {args.stride})")
+        if args.max_windows is not None and args.max_windows < 1:
+            ap.error(f"--max-windows must be >= 1 (got {args.max_windows})")
+        if len(args.seeds) != 1:
+            ap.error("windowed replay repurposes the seeds axis as the "
+                     "window index; pass a single --seeds entry")
+        if args.journal or args.resume:
+            ap.error("--journal/--resume do not support windowed replay; "
+                     "run without --window to journal a trace campaign")
 
     churn = {}
     if args.events:
@@ -255,7 +297,16 @@ def campaign_main(argv) -> None:
     grid = CampaignGrid(strategies=tuple(args.strategies),
                         schedulers=tuple(args.schedulers),
                         loads=tuple(args.loads), seeds=tuple(args.seeds))
-    trace = load_trace_csv(args.trace) if args.trace else None
+    # TraceSource with format="csv" goes through the exact same row
+    # validation as load_trace_csv, so native traces stay bit-identical
+    source = (TraceSource(args.trace, format=args.trace_format)
+              if args.trace else None)
+    trace = None
+    if source is not None and args.window is None:
+        try:
+            trace = source.load()
+        except ValueError as e:        # covers TraceFormatError
+            ap.error(str(e))
     workload = WorkloadSpec(
         num_jobs=500 if args.jobs is None else args.jobs,
         size_mix="helios" if args.size_mix is None else args.size_mix,
@@ -263,6 +314,7 @@ def campaign_main(argv) -> None:
         deadline_slack=tuple(args.deadline_slack) if args.deadline_slack
         else None, **churn)
     config = SimConfig(engine=args.engine,
+                       trace_format=args.trace_format,
                        incremental=not args.full_recompute,
                        workers=args.workers,
                        store="stream" if args.stream else "full",
@@ -272,12 +324,22 @@ def campaign_main(argv) -> None:
                        max_retries=(2 if args.max_retries is None
                                     else args.max_retries),
                        quarantine=args.quarantine)
-    from repro.core import JournalMismatch
+    from repro.core import JournalMismatch, TraceFormatError
     try:
-        result = run_campaign(spec, grid, workload=workload, trace=trace,
-                              ocs_spec=ocs_spec, config=config,
-                              journal=args.journal, resume=args.resume,
-                              progress=lambda m: print(m, flush=True))
+        if args.window is not None:
+            result = run_windowed_campaign(
+                spec, grid, source, args.window, args.stride,
+                args.max_windows, ocs_spec=ocs_spec, config=config,
+                progress=lambda m: print(m, flush=True))
+        else:
+            result = run_campaign(spec, grid, workload=workload,
+                                  trace=trace, ocs_spec=ocs_spec,
+                                  config=config, journal=args.journal,
+                                  resume=args.resume,
+                                  progress=lambda m: print(m, flush=True))
+    except TraceFormatError as e:
+        # a malformed trace surfacing mid-stream is a usage error too
+        ap.error(str(e))
     except JournalMismatch as e:
         # surface journal/grid mismatches as CLI usage errors, like the
         # --events validation above

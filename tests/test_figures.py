@@ -25,7 +25,7 @@ def _by_name(tables):
 def test_registry_shape():
     names = figure_names()
     assert names == ("jct-vs-load", "contention-cdf", "frag-timeline",
-                     "ocs-comparison")
+                     "ocs-comparison", "real-trace")
     for n in names:
         assert FIGURES[n].name == n
 
@@ -93,6 +93,22 @@ def test_frag_timeline_smoke_golden(smoke_tables):
     assert meta["mean_frag[best (defrag)]"] < 0.15
     assert t.series_values() == ["best (defrag)", "best (no defrag)",
                                  "ocs-relax (scattered)"]
+
+
+def test_real_trace_smoke_golden(smoke_tables):
+    """The measured-trace figure replays the committed Alibaba fixture:
+    25 normalized jobs (5 task groups skipped), 3 ten-job windows."""
+    t = _by_name(smoke_tables)["real-trace"]
+    meta = t.meta_dict()
+    assert meta["format"] == "alibaba"
+    assert meta["windows"] == 3
+    assert meta["skipped"] == 5
+    got = {r[0]: (r[1], r[5]) for r in t.rows}   # strategy -> (jct, n)
+    assert set(got) == {"vclos", "sr", "ecmp"}
+    assert all(n == 25 for _, n in got.values())
+    assert got["ecmp"][0] == 9041.0
+    assert got["sr"][0] == 9025.5
+    assert got["vclos"][0] == 11469.1
 
 
 def test_qualitative_orderings_hold(smoke_tables):

@@ -1,0 +1,354 @@
+"""TraceSource adapter contract suite: round-trip losslessness, schema
+inference, Alibaba task-taxonomy normalization, streaming ≡ eager parity,
+windowed replay, and the arrival-process fitting helpers."""
+
+import csv
+import dataclasses
+from pathlib import Path
+
+import pytest
+
+from repro.core import (CampaignGrid, SimConfig, TESTBED32, WorkloadSpec,
+                        generate_trace, load_trace_csv, run_windowed_campaign,
+                        save_trace_csv)
+from repro.core.jobs import BATCHES, PROFILES, Job
+from repro.core.traces import (ADAPTERS, TRACE_FORMATS, JobIdInterner,
+                               TraceFormatError, TraceSource, detect_format,
+                               empirical_size_mix, fit_workload,
+                               iter_windows, iters_for_duration,
+                               stable_model_for, summarize_jobs)
+
+ROOT = Path(__file__).resolve().parent.parent
+ALIBABA_FIXTURE = ROOT / "src" / "repro" / "data" / "alibaba_sample.csv"
+
+
+def _fields(j):
+    return (j.job_id, j.model, j.num_gpus, j.batch_size, j.arrival,
+            j.num_iters, j.allreduce_algo, j.deadline)
+
+
+@pytest.fixture()
+def native_csv(tmp_path):
+    jobs = generate_trace(WorkloadSpec(num_jobs=150, seed=11,
+                                       deadline_slack=(2.0, 3.0)))
+    path = tmp_path / "trace.csv"
+    save_trace_csv(jobs, str(path))
+    return jobs, str(path)
+
+
+# ---------------------------------------------------------------------------
+# round-trip oracle: the normalizer is lossless on our own schema
+# ---------------------------------------------------------------------------
+
+def test_native_round_trip_bit_identical(native_csv):
+    jobs, path = native_csv
+    back = TraceSource(path, format="csv").load()
+    assert [_fields(j) for j in back] == [_fields(j) for j in jobs]
+    assert back == load_trace_csv(path)
+
+
+def test_generic_adapter_round_trips_renamed_columns(native_csv, tmp_path):
+    """synthetic trace → trace_csv → generic adapter (every column behind
+    an alias) reproduces the identical Jobs."""
+    jobs, path = native_csv
+    renames = {"job_id": "jobid", "num_gpus": "gpu_num",
+               "arrival": "submit_time", "num_iters": "iterations",
+               "batch_size": "batchsize"}
+    out = tmp_path / "renamed.csv"
+    with open(path) as f:
+        rows = list(csv.DictReader(f))
+    cols = [renames.get(c, c) for c in rows[0]]
+    with open(out, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=cols)
+        w.writeheader()
+        for r in rows:
+            w.writerow({renames.get(k, k): v for k, v in r.items()})
+    src = TraceSource(str(out), format="auto")
+    assert src.resolve_format() == "generic"
+    back = src.load()
+    assert [_fields(j) for j in back] == [_fields(j) for j in jobs]
+
+
+def test_generic_adapter_derives_iters_from_duration(tmp_path):
+    path = tmp_path / "g.csv"
+    path.write_text("job_name,gpus,submit_time,run_time\n"
+                    "jobA,4,100,3600\njobB,2,200,0\njobC,1,300,1800\n")
+    src = TraceSource(str(path), format="generic")
+    jobs = src.load()
+    assert [j.job_id for j in jobs] == [0, 2]     # jobB: zero duration
+    assert src.last_adapter.skipped == 1
+    for j in jobs:
+        assert j.model in PROFILES and j.num_iters >= 1
+        assert j.batch_size == BATCHES[j.model][0]
+
+
+# ---------------------------------------------------------------------------
+# schema inference
+# ---------------------------------------------------------------------------
+
+def test_detect_format():
+    assert detect_format(("job_id", "model", "num_gpus", "batch_size",
+                          "arrival", "num_iters", "allreduce_algo",
+                          "deadline")) == "csv"
+    assert detect_format(("job_name", "task_name", "inst_num", "plan_gpu",
+                          "start_time", "end_time", "status")) == "alibaba"
+    assert detect_format(("jobid", "gpu_num", "submit_time",
+                          "duration")) == "generic"
+    with pytest.raises(TraceFormatError, match="no trace adapter"):
+        detect_format(("foo", "bar"))
+    assert tuple(ADAPTERS) == ("csv", "alibaba", "generic")
+    assert TRACE_FORMATS == ("csv", "alibaba", "generic", "auto")
+
+
+def test_trace_source_validates_inputs(tmp_path):
+    with pytest.raises(ValueError, match="unknown trace format"):
+        TraceSource("x.csv", format="philly")
+    with pytest.raises(ValueError, match="reorder_window"):
+        TraceSource("x.csv", reorder_window=0)
+    empty = tmp_path / "empty.csv"
+    empty.write_text("")
+    with pytest.raises(TraceFormatError, match="no header"):
+        TraceSource(str(empty)).load()
+
+
+def test_simconfig_trace_format_validated():
+    assert SimConfig(trace_format="alibaba").trace_format == "alibaba"
+    with pytest.raises(ValueError, match="unknown trace format"):
+        SimConfig(trace_format="philly")
+
+
+# ---------------------------------------------------------------------------
+# Alibaba task taxonomy
+# ---------------------------------------------------------------------------
+
+def test_alibaba_fixture_normalizes():
+    """The committed ~50-row PAI sample yields valid, sorted Jobs."""
+    src = TraceSource(str(ALIBABA_FIXTURE), format="auto")
+    assert src.resolve_format() == "alibaba"
+    jobs = src.load()
+    assert len(jobs) == 25
+    assert src.last_adapter.skipped == 5
+    for j in jobs:
+        assert j.model in PROFILES
+        assert j.num_gpus >= 1 and j.num_iters >= 1
+        assert j.batch_size >= 1 and j.arrival >= 0
+    arrivals = [(j.arrival, j.job_id) for j in jobs]
+    assert arrivals == sorted(arrivals)
+    # interned ids are dense 0..n-1 in first-appearance order
+    assert sorted(j.job_id for j in jobs) == list(range(25))
+
+
+def test_alibaba_gpu_taxonomy(tmp_path):
+    """workers + chief count GPUs; ps never does; evaluators only when
+    plan_gpu > 0; plan_gpu is percent-of-one-GPU per instance."""
+    path = tmp_path / "ali.csv"
+    path.write_text(
+        "job_name,task_name,inst_num,plan_gpu,start_time,end_time,status\n"
+        "j1,worker,4,50,0,1000,Terminated\n"        # 4*0.5 = 2 GPUs
+        "j1,ps,8,100,0,1000,Terminated\n"           # ps ignored even w/ plan
+        "j2,chief,1,100,10,2000,Terminated\n"       # 1
+        "j2,evaluator,2,100,10,2000,Terminated\n"   # + 2 (plan > 0)
+        "j3,worker,1,100,20,3000,Terminated\n"
+        "j3,evaluator,1,0,20,3000,Terminated\n")    # plan 0: no GPU
+    jobs = TraceSource(str(path), format="alibaba").load()
+    assert [(j.job_id, j.num_gpus) for j in jobs] == [(0, 2), (1, 3), (2, 1)]
+
+
+def test_alibaba_skips_and_group_contract(tmp_path):
+    header = ("job_name,task_name,inst_num,plan_gpu,start_time,end_time,"
+              "status\n")
+    path = tmp_path / "ali.csv"
+    # non-Terminated, ps-only, and zero-duration groups are skipped
+    path.write_text(header +
+                    "a,worker,1,100,0,100,Failed\n"
+                    "b,ps,2,0,5,100,Terminated\n"
+                    "c,worker,1,100,10,10,Terminated\n"
+                    "d,worker,1,100,20,120,Terminated\n")
+    src = TraceSource(str(path), format="alibaba")
+    jobs = src.load()
+    assert len(jobs) == 1 and src.last_adapter.skipped == 3
+    # a job_name reappearing after its group closed is an error, not a
+    # silent split
+    path.write_text(header +
+                    "a,worker,1,100,0,100,Terminated\n"
+                    "b,worker,1,100,5,100,Terminated\n"
+                    "a,ps,1,0,0,100,Terminated\n")
+    with pytest.raises(TraceFormatError, match="reappears"):
+        TraceSource(str(path), format="alibaba").load()
+
+
+# ---------------------------------------------------------------------------
+# streaming reader
+# ---------------------------------------------------------------------------
+
+def test_streaming_equals_eager(native_csv):
+    jobs, path = native_csv
+    src = TraceSource(path, format="csv")
+    assert list(src.iter_jobs()) == src.load()
+    ali = TraceSource(str(ALIBABA_FIXTURE), format="alibaba")
+    assert list(ali.iter_jobs()) == ali.load()
+
+
+def test_streaming_reorder_buffer(native_csv, tmp_path):
+    """Mild disorder sorts inside the bounded buffer; disorder beyond
+    reorder_window is an explicit error, never a silently wrong order."""
+    jobs, _ = native_csv
+    path = tmp_path / "shuffled.csv"
+    save_trace_csv(list(reversed(jobs)), str(path))
+    ordered = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
+    assert list(TraceSource(str(path), format="csv",
+                            reorder_window=len(jobs)).iter_jobs()) == ordered
+    with pytest.raises(TraceFormatError, match="out of order"):
+        list(TraceSource(str(path), format="csv",
+                         reorder_window=4).iter_jobs())
+
+
+def test_rebase_and_max_gpus(native_csv, tmp_path):
+    jobs, _ = native_csv
+    shifted = [dataclasses.replace(j, arrival=j.arrival + 1e6,
+                                   deadline=(None if j.deadline is None
+                                             else j.deadline + 1e6))
+               for j in jobs]
+    path = tmp_path / "shifted.csv"
+    save_trace_csv(shifted, str(path))
+    src = TraceSource(str(path), format="csv", rebase=True, max_gpus=8)
+    back = list(src.iter_jobs())
+    assert back[0].arrival == 0.0
+    # rebase subtracts the first arrival, so gaps match the original trace
+    assert [j.arrival for j in back] == pytest.approx(
+        [j.arrival - jobs[0].arrival for j in jobs])
+    assert max(j.num_gpus for j in back) <= 8
+    assert back == src.load()
+
+
+# ---------------------------------------------------------------------------
+# windowing
+# ---------------------------------------------------------------------------
+
+def test_iter_windows_overlap_and_coverage(native_csv):
+    jobs, _ = native_csv
+    ws = list(iter_windows(jobs, window_jobs=60, stride_jobs=30))
+    assert [(w.index, w.start, len(w.jobs)) for w in ws] == [
+        (0, 0, 60), (1, 30, 60), (2, 60, 60), (3, 90, 60), (4, 120, 30)]
+    for w in ws:
+        # window w holds trace indices [start, start+window), rebased to 0
+        chunk = jobs[w.start:w.start + 60]
+        assert w.t0 == chunk[0].arrival
+        assert [j.job_id for j in w.jobs] == [j.job_id for j in chunk]
+        assert w.jobs[0].arrival == 0.0
+        assert [j.arrival for j in w.jobs] == pytest.approx(
+            [j.arrival - w.t0 for j in chunk])
+
+
+def test_iter_windows_max_windows_stops_consuming(native_csv):
+    jobs, _ = native_csv
+    pulled = []
+
+    def feed():
+        for j in jobs:
+            pulled.append(j.job_id)
+            yield j
+
+    ws = list(iter_windows(feed(), window_jobs=20, stride_jobs=20,
+                           max_windows=2))
+    assert [(w.index, len(w.jobs)) for w in ws] == [(0, 20), (1, 20)]
+    # the stream is abandoned right after the second window closes
+    assert len(pulled) == 40
+
+
+def test_iter_windows_edge_shapes(native_csv):
+    jobs, _ = native_csv
+    # stride > window leaves gaps by design
+    ws = list(iter_windows(jobs[:100], window_jobs=10, stride_jobs=50))
+    assert [(w.index, w.start) for w in ws] == [(0, 0), (1, 50)]
+    # short trace: one partial window
+    ws = list(iter_windows(jobs[:7], window_jobs=10))
+    assert [(w.index, len(w.jobs)) for w in ws] == [(0, 7)]
+    assert list(iter_windows([], window_jobs=10)) == []
+    with pytest.raises(ValueError, match="window_jobs"):
+        list(iter_windows(jobs, window_jobs=0))
+
+
+def test_run_windowed_campaign(native_csv):
+    jobs, path = native_csv
+    grid = CampaignGrid(strategies=("ecmp", "sr"), loads=(120.0,))
+    res = run_windowed_campaign(TESTBED32, grid,
+                                TraceSource(path, format="csv", max_gpus=16),
+                                window_jobs=50, stride_jobs=50)
+    assert res.grid.seeds == (0, 1, 2)
+    assert len(res.cells) == 6 and res.missing_cells() == []
+    rows = res.aggregate()
+    assert {r["strategy"] for r in rows} == {"ecmp", "sr"}
+    assert all(r["seeds"] == 3 for r in rows)
+    # windows pool like seeds: n_finished sums every window's jobs
+    assert all(r["n_finished"] == 150 for r in rows)
+
+
+def test_run_windowed_campaign_validates_grid(native_csv):
+    _, path = native_csv
+    bad = CampaignGrid(strategies=("ecmp",), seeds=(0, 1))
+    with pytest.raises(ValueError, match="seeds axis"):
+        run_windowed_campaign(TESTBED32, bad, path, window_jobs=50)
+    with pytest.raises(ValueError, match="max_windows"):
+        run_windowed_campaign(
+            TESTBED32, CampaignGrid(strategies=("ecmp",)),
+            TraceSource(path, format="csv", max_gpus=16),
+            window_jobs=50, max_windows=0)
+
+
+def test_run_windowed_campaign_empty_trace(tmp_path):
+    path = tmp_path / "empty.csv"
+    path.write_text("job_id,model,num_gpus,batch_size,arrival,num_iters,"
+                    "allreduce_algo,deadline\n")
+    with pytest.raises(ValueError, match="no windows"):
+        run_windowed_campaign(TESTBED32, CampaignGrid(strategies=("ecmp",)),
+                              str(path), window_jobs=50)
+
+
+# ---------------------------------------------------------------------------
+# normalization helpers
+# ---------------------------------------------------------------------------
+
+def test_interner_is_first_appearance_dense():
+    it = JobIdInterner()
+    assert [it.intern(x) for x in ("b", "a", "b", "c")] == [0, 1, 0, 2]
+    assert it.mapping() == {"b": 0, "a": 1, "c": 2}
+    assert "a" in it and "z" not in it
+
+
+def test_stable_model_assignment():
+    """crc32-based, so stable across processes and PYTHONHASHSEED."""
+    assert stable_model_for("job-123") == stable_model_for("job-123")
+    assert stable_model_for("job-123") in PROFILES
+    pool = {stable_model_for(f"job-{i}") for i in range(200)}
+    assert len(pool) > 1
+
+
+def test_iters_for_duration_inverts_iter_time():
+    for model in ("vgg16", "bert"):
+        job = Job(0, model, 4, BATCHES[model][0], 0.0, 1)
+        per_iter = job.iter_time(1.0)
+        iters = iters_for_duration(model, 4, BATCHES[model][0],
+                                   1000 * per_iter)
+        assert iters == pytest.approx(1000, abs=1)
+    assert iters_for_duration("vgg16", 1, 32, 1e-9) == 1   # floor at 1
+
+
+def test_summary_and_fit(native_csv):
+    jobs, _ = native_csv
+    s = summarize_jobs(jobs)
+    assert s.n == len(jobs)
+    assert s.span == jobs[-1].arrival - jobs[0].arrival
+    assert sum(p for _, p in s.size_mix) == pytest.approx(1.0)
+    assert empirical_size_mix(jobs) == s.size_mix
+    spec = fit_workload(jobs, seed=9)
+    assert spec.num_jobs == len(jobs) and spec.seed == 9
+    assert spec.mean_interarrival == pytest.approx(
+        s.span / (s.n - 1))
+    assert spec.size_mix == s.size_mix
+    regen = generate_trace(spec)
+    assert {j.num_gpus for j in regen} <= {g for g, _ in s.size_mix}
+    # empty stream: zero summary (streaming accumulator), fit refuses
+    assert summarize_jobs([]).n == 0
+    with pytest.raises(ValueError, match="empty"):
+        fit_workload([])

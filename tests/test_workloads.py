@@ -99,6 +99,58 @@ def test_csv_validation(tmp_path):
         load_trace_csv(str(tmp_path / "cols.csv"))
 
 
+def test_csv_rejects_non_finite_and_negative_times(tmp_path):
+    """nan/inf/negative arrival or deadline values must be rejected at load
+    time: a single nan arrival poisons the v2 completion heap's total order
+    (every comparison is False), not just one job's metrics."""
+    header = ("job_id,model,num_gpus,batch_size,arrival,num_iters,"
+              "allreduce_algo,deadline\n")
+    path = tmp_path / "bad.csv"
+    for arrival in ("nan", "inf", "-inf", "-1.0"):
+        path.write_text(header + f"0,vgg16,8,32,{arrival},100,ring,\n")
+        with pytest.raises(ValueError, match=r"trace .*bad\.csv:2: "):
+            load_trace_csv(str(path))
+    path.write_text(header + "0,vgg16,8,32,0.0,100,ring,nan\n")
+    with pytest.raises(ValueError, match="deadline"):
+        load_trace_csv(str(path))
+    path.write_text(header + "0,vgg16,8,32,abc,100,ring,\n")
+    with pytest.raises(ValueError, match="not a number"):
+        load_trace_csv(str(path))
+
+
+def test_csv_rejects_non_positive_batch_size(tmp_path):
+    header = ("job_id,model,num_gpus,batch_size,arrival,num_iters,"
+              "allreduce_algo,deadline\n")
+    path = tmp_path / "bad.csv"
+    for batch in ("0", "-4"):
+        path.write_text(header + f"0,vgg16,8,{batch},0.0,100,ring,\n")
+        with pytest.raises(ValueError, match="batch_size"):
+            load_trace_csv(str(path))
+
+
+def test_equal_arrival_tie_break_is_deterministic(tmp_path):
+    """Coarse real-trace timestamps produce many equal arrivals; replay
+    order must tie-break on (arrival, job_id), not file order."""
+    jobs = generate_trace(WorkloadSpec(num_jobs=40, seed=2))
+    flat = [dataclasses.replace(j, arrival=60.0) for j in jobs]
+    path = tmp_path / "flat.csv"
+    save_trace_csv(list(reversed(flat)), str(path))
+    back = load_trace_csv(str(path))
+    assert [j.job_id for j in back] == sorted(j.job_id for j in back)
+
+
+def test_zero_span_trace_stats_finite():
+    """All-equal arrivals (and single jobs) report arrival_rate 0.0, not
+    inf — the documented zero-span convention keeps stats JSON-safe."""
+    jobs = generate_trace(WorkloadSpec(num_jobs=10, seed=0))
+    flat = [dataclasses.replace(j, arrival=5.0) for j in jobs]
+    stats = trace_stats(flat)
+    assert stats["arrival_rate"] == 0.0
+    assert stats["mean_interarrival"] == 0.0
+    single = trace_stats(jobs[:1])
+    assert single["arrival_rate"] == 0.0
+
+
 def test_load_trace_sorts_by_arrival(tmp_path):
     jobs = generate_trace(WorkloadSpec(num_jobs=30, seed=1))
     path = tmp_path / "shuffled.csv"
