@@ -2,9 +2,9 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-fast test-batched test-chaos test-traces bench-smoke \
-        bench bench-gate docs-lint docs-lint-fast check report report-smoke \
-        report-paper examples-smoke service-smoke
+.PHONY: test test-fast test-batched test-chaos test-traces test-hetero \
+        bench bench-smoke bench-gate docs-lint docs-lint-fast check report \
+        report-smoke report-paper examples-smoke service-smoke
 
 test:            ## tier-1 verification (what CI gates on) — the full suite
 	$(PY) -m pytest -x -q
@@ -21,11 +21,14 @@ test-chaos:      ## fault-tolerant runtime: crash/hang/flaky recovery + bit-iden
 test-traces:     ## trace-ingestion contract suite: adapters, streaming, windows (docs/traces.md)
 	$(PY) -m pytest -x -q tests/test_traces.py
 
+test-hetero:     ## heterogeneous-fabric differential suite incl. slow parity sweeps (docs/heterogeneous.md)
+	$(PY) -m pytest -x -q tests/test_hetero.py
+
 bench-smoke:     ## ~60s campaign smoke: v2-vs-v1 speedup, JCT identity, parallel path
 	$(PY) -m benchmarks.bench_campaign
 
-bench-json:      ## campaign + batched + scale + fairshare + report + service + traces benches -> BENCH_campaign.json (+ gate)
-	$(PY) -m benchmarks.run --only campaign,batched,scale,fairshare,report,service,traces --json
+bench-json:      ## campaign + batched + hetero + scale + fairshare + report + service + traces benches -> BENCH_campaign.json (+ gate)
+	$(PY) -m benchmarks.run --only campaign,batched,hetero,scale,fairshare,report,service,traces --json
 	$(PY) scripts/bench_gate.py
 
 bench-gate:      ## fail if the committed BENCH_campaign.json lost the 5x target
@@ -55,7 +58,7 @@ service-smoke:   ## scheduler daemon end-to-end: TCP session, quotas, what-if, l
 # check runs docs-lint with --no-results: report-smoke already rebuilds the
 # smoke figure suite and byte-compares the gallery, so the drift check runs
 # exactly once per check (standalone `make docs-lint` keeps the full set)
-check: docs-lint-fast bench-gate examples-smoke service-smoke report-smoke test-fast test-batched test-chaos test-traces   ## lint + perf gate + fast tests (full tier-1: make test)
+check: docs-lint-fast bench-gate examples-smoke service-smoke report-smoke test-fast test-batched test-chaos test-traces test-hetero   ## lint + perf gate + fast tests (full tier-1: make test)
 
 docs-lint-fast:
 	$(PY) scripts/docs_lint.py --no-results

@@ -1,0 +1,127 @@
+"""Heterogeneous-fabric overhead benchmark — the speed-aware rate path.
+
+``bench_hetero[rate_resolution]`` — the gated cell: the 144-cell
+acceptance grid (best/sr/ecmp × 12 seeds × 4 loads, 400 jobs/cell,
+2048 GPUs) through the serial v2 loop on a *degenerate* hetero spec
+(per-tier speeds pinned to ``link_gbps``, every server scale 1.0)
+versus the same cells on the plain homogeneous ``CLUSTER2048``.  The
+degenerate spec exercises the full speed-aware resolution path
+(``spec.is_hetero`` is true) while provably producing the identical
+schedule, so the paired ratio isolates the cost of the hetero
+arithmetic itself.  Paired-median protocol like ``bench_campaign``:
+each repeat times both sides back-to-back and contributes one ratio;
+trace generation and job copying are excluded from both sides.
+Schedules must be bit-identical (``identical_jct``), and the
+acceptance flag ``hetero_ratio_le_1_3x`` requires the median hetero /
+homogeneous ratio to stay ≤ 1.3 on this 144-cell grid —
+``scripts/bench_gate.py`` enforces both whenever the cell is present
+in the recording (docs/heterogeneous.md).
+
+  PYTHONPATH=src python -m benchmarks.bench_hetero [--full]
+"""
+
+from __future__ import annotations
+
+import copy
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.simulator import ClusterSimulator
+from repro.core.strategies import get_strategy
+from repro.core.topology import CLUSTER2048
+from repro.core.workloads import WorkloadSpec, generate_trace
+
+#: same 144-cell grid as bench_batched — the established acceptance size
+GRID_STRATS = ("best", "sr", "ecmp")
+GRID_LOADS = (4.0, 6.0, 8.0, 12.0)
+GRID_SEEDS = tuple(range(12))
+GRID_JOBS = 400
+GRID_MAX_GPUS = 16
+
+#: degenerate hetero twin of CLUSTER2048: every ratio 1.0, every scale
+#: 1.0 — is_hetero is true, the schedule is bit-identical by contract
+HETERO2048 = dataclasses.replace(
+    CLUSTER2048,
+    leaf_uplink_gbps=CLUSTER2048.link_gbps,
+    server_nic_gbps=CLUSTER2048.link_gbps,
+    server_scale=(1.0,) * CLUSTER2048.num_servers)
+
+
+def _cells():
+    out = []
+    for s in GRID_STRATS:
+        for seed in GRID_SEEDS:
+            for load in GRID_LOADS:
+                ws = WorkloadSpec(num_jobs=GRID_JOBS, mean_interarrival=load,
+                                  max_gpus=GRID_MAX_GPUS, seed=seed)
+                out.append((generate_trace(ws), s, seed))
+    return out
+
+
+def _serial_v2(spec, cells):
+    reports = []
+    for jobs, s, seed in cells:
+        sim = ClusterSimulator(spec, strategy=get_strategy(s),
+                               seed=seed, engine="v2")
+        reports.append(sim.run(jobs))
+    return reports
+
+
+def run(fast: bool = True):
+    repeats = 3 if fast else 5
+    cells = _cells()
+
+    # warm allocators / strategy caches on a small prefix (excluded)
+    _serial_v2(CLUSTER2048, [(copy.deepcopy(j), s, seed)
+                             for j, s, seed in cells[:6]])
+    _serial_v2(HETERO2048, [(copy.deepcopy(j), s, seed)
+                            for j, s, seed in cells[:6]])
+
+    ratios = []
+    t_h_best = float("inf")
+    rep_homog = rep_hetero = None
+    for _ in range(repeats):
+        # fresh job copies for both sides, prepared outside the timers
+        homog_cells = [(copy.deepcopy(j), s, seed) for j, s, seed in cells]
+        hetero_cells = [(copy.deepcopy(j), s, seed) for j, s, seed in cells]
+        t0 = time.perf_counter()
+        rep_homog = _serial_v2(CLUSTER2048, homog_cells)
+        t_homog = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        rep_hetero = _serial_v2(HETERO2048, hetero_cells)
+        t_hetero = time.perf_counter() - t0
+        ratios.append(t_hetero / t_homog)
+        t_h_best = min(t_h_best, t_hetero)
+    ratios.sort()
+    med = ratios[len(ratios) // 2]
+    identical = all(
+        a.n_finished == b.n_finished
+        and np.array_equal(np.asarray(a.jcts), np.asarray(b.jcts))
+        and np.array_equal(np.asarray(a.jwts), np.asarray(b.jwts))
+        for a, b in zip(rep_homog, rep_hetero))
+    return [{
+        "name": "bench_hetero[rate_resolution]",
+        "us_per_call": round(t_h_best * 1e6, 1),
+        "derived": {"engine": "v2", "cells": len(cells),
+                    "jobs_per_cell": GRID_JOBS, "gpus": 2048,
+                    "strategies": list(GRID_STRATS),
+                    "repeats": repeats,
+                    "hetero_over_homog_ratio": round(med, 3),
+                    "ratios_all": [round(r, 3) for r in ratios],
+                    "identical_jct": identical,
+                    "hetero_ratio_le_1_3x":
+                        bool(med <= 1.3 and len(cells) >= 144)},
+    }]
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from .common import emit
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="5 paired repeats instead of 3")
+    args = ap.parse_args()
+    emit(run(fast=not args.full))

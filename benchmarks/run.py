@@ -29,6 +29,7 @@ MODULES = [
     ("table7", "benchmarks.bench_table7_dist"),
     ("campaign", "benchmarks.bench_campaign"),
     ("batched", "benchmarks.bench_batched"),
+    ("hetero", "benchmarks.bench_hetero"),
     ("scale", "benchmarks.bench_scale"),
     ("fairshare", "benchmarks.bench_fairshare"),
     ("report", "benchmarks.bench_report"),
@@ -41,7 +42,7 @@ MODULES = [
 SUMMARY_PREFIXES = ("campaign_engine", "campaign_churn", "campaign_resume",
                     "scale_engine", "scale_campaign_cell",
                     "campaign_parallel", "report_suite", "bench_batched",
-                    "bench_service", "bench_traces")
+                    "bench_hetero", "bench_service", "bench_traces")
 
 
 def write_json(path: str, rows, failures: int, full: bool) -> None:

@@ -26,7 +26,14 @@ and exits non-zero when:
      client-observed placement p99 under load exceeded its recorded
      bound (the ISSUE 8 online-service gates; older recordings
      tolerated), or
-  7. a ``bench_traces`` cell is present but ``stream_eq_eager`` is
+  7. a ``bench_hetero[rate_resolution]`` cell is present but its
+     ``hetero_ratio_le_1_3x`` flag is false — the speed-aware hetero
+     rate-resolution path costs more than 1.3x the homogeneous
+     arithmetic on the 144-cell acceptance grid, or its
+     ``identical_jct`` flag is false — the degenerate hetero spec
+     stopped reproducing the homogeneous schedule bit-for-bit
+     (docs/heterogeneous.md; older recordings tolerated), or
+  8. a ``bench_traces`` cell is present but ``stream_eq_eager`` is
      false — the streaming trace reader diverged from the eager loader
      on a shared prefix — or ``rss_within_bound`` is false — the
      million-job windowed replay's peak RSS exceeded its recorded bound
@@ -111,6 +118,16 @@ def main() -> int:
                 f"above the {row.get('p99_bound_ms')}ms bound "
                 f"({row.get('queries')} queries over "
                 f"{row.get('connections')} connections)")
+        # bench_hetero cells gate only when present (ISSUE 10+): the
+        # speed-aware rate path must stay within 1.3x of the homogeneous
+        # arithmetic (its degenerate bit-identity rides the generic
+        # identical_jct check above)
+        if "hetero_ratio_le_1_3x" in row \
+                and not row["hetero_ratio_le_1_3x"]:
+            errors.append(
+                f"{name}: hetero rate resolution above 1.3x homogeneous "
+                f"(median: {row.get('hetero_over_homog_ratio')}x on "
+                f"{row.get('cells')} cells)")
         # bench_traces cells gate only when present (ISSUE 9+): streaming
         # ingestion must match the eager loader and stay inside its
         # recorded peak-RSS bound on the million-job windowed replay

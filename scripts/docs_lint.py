@@ -26,7 +26,7 @@ ROOT = Path(__file__).resolve().parent.parent
 DOCS = ["README.md", "docs/architecture.md", "docs/simulator.md",
         "docs/batched.md", "docs/strategies.md", "docs/events.md",
         "docs/reproduction.md", "docs/robustness.md", "docs/service.md",
-        "docs/traces.md", "docs/results.md"]
+        "docs/traces.md", "docs/heterogeneous.md", "docs/results.md"]
 
 errors: list[str] = []
 

@@ -25,14 +25,15 @@ Layers:
 
 from .topology import (CLUSTER512, CLUSTER512_OCS, CLUSTER2048,
                        CLUSTER2048_OCS, TESTBED32, ClusterSpec, FabricState,
-                       OCSLayer)
+                       OCSLayer, apply_gpu_mix)
 from .traffic import (Flow, double_binary_tree_allreduce,
                       halving_doubling_allreduce, hierarchical_ring_allreduce,
                       pairwise_alltoall, pipeline_p2p, ring_allreduce)
 from .routing import (BalancedECMPRouting, ContentionReport, ECMPRouting,
                       IdealRouting, SourceRouting, contention,
                       contention_histogram)
-from .patterns import is_leafwise_permutation, all_phases_leafwise
+from .patterns import (all_phases_leafwise, comm_duty_cycle, duty_overflow,
+                       is_leafwise_permutation)
 from .placement import (Placement, PlacementFailure, VirtualClos, commit,
                         find_vclos, release, stage0_server, stage1_leaf,
                         vclos_place)

@@ -970,6 +970,13 @@ def run_lanes(spec, lanes_in: Sequence[tuple],
     this lane's own arrival-sorted Job copies (mutated in place, like
     ``ClusterSimulator.run``).  Returns one report per lane, in order.
     """
+    if spec.is_hetero:
+        # per-tier speeds / straggler scales are resolved by the v1/v2
+        # engines only; a hetero spec must delegate, never run lanes
+        raise ValueError(
+            "heterogeneous specs do not qualify for the batched engine; "
+            "run engine='batched' through ClusterSimulator (it delegates "
+            "to the bit-identical v2 path) or use engine='v2' directly")
     ls = LinkSpace(spec)
     lanes = []
     for i, (jobs, strat, seed) in enumerate(lanes_in):
@@ -1000,6 +1007,9 @@ def try_run_batched(sim, jobs: List[Job],
     arrival-sorted; they are mutated in place like the v2 run."""
     if (type(sim.strategy_obj) not in _FAST_STRATEGY_TYPES
             or not _routing_qualifies(sim.routing)
+            or sim.spec.is_hetero       # speed-aware rate resolution and
+            # the straggler model live in v1/v2 only — hetero specs always
+            # take the bit-identical v2 path (docs/heterogeneous.md)
             or sim.scheduler != "fifo"
             or sim._events
             or not math.isinf(sim._next_defrag)

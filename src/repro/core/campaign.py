@@ -486,7 +486,10 @@ def run_campaign(spec: ClusterSpec, grid: CampaignGrid,
                 from .batched import config_qualifies, run_lanes
                 groups: Dict[int, Tuple[ClusterSpec, List[int]]] = {}
                 for i in pending:
-                    if config_qualifies(cells[i].config):
+                    # hetero specs never lane-batch: speed-aware rate
+                    # resolution lives in v1/v2 (docs/heterogeneous.md)
+                    if not cells[i].spec.is_hetero \
+                            and config_qualifies(cells[i].config):
                         groups.setdefault(id(cells[i].spec),
                                           (cells[i].spec, []))[1].append(i)
                 for cell_spec, idxs in groups.values():

@@ -32,14 +32,20 @@ except Exception:  # pragma: no cover
 
 
 def maxmin_fair_numpy(flow_links: Sequence[Sequence[Hashable]],
-                      capacity: Dict[Hashable, float] | float = 1.0
-                      ) -> np.ndarray:
+                      capacity: Dict[Hashable, float] | float = 1.0,
+                      flow_cap: float = 1.0) -> np.ndarray:
     """Progressive filling over an explicit link list per flow.
 
-    flow_links[i] — links used by flow i (empty ⇒ unconstrained, rate 1.0).
+    flow_links[i] — links used by flow i (empty ⇒ unconstrained, rate
+    ``flow_cap``).  ``flow_cap`` is the per-flow rate ceiling — the
+    server-NIC tier: no flow can exceed its host NIC regardless of fabric
+    headroom.  The historical hard-coded ``1.0`` assumed a homogeneous
+    fabric; on per-tier-speed specs derive it from the spec instead
+    (``spec.nic_ratio``, docs/heterogeneous.md).  The default reproduces
+    the homogeneous behaviour bit-for-bit (tests/test_hetero.py).
     """
     nflows = len(flow_links)
-    rates = np.ones(nflows)
+    rates = np.full(nflows, float(flow_cap))
     links: Dict[Hashable, List[int]] = {}
     for i, ls in enumerate(flow_links):
         for l in ls:
@@ -66,7 +72,7 @@ def maxmin_fair_numpy(flow_links: Sequence[Sequence[Hashable]],
                 best, best_share = l, share
         if best is None:
             break
-        share = min(best_share, 1.0)  # NIC-bounded: a flow can't exceed 1 link
+        share = min(best_share, flow_cap)  # NIC-bounded: flow ≤ its NIC rate
         for i in list(active[best]):
             rates[i] = share
             frozen[i] = True
@@ -74,19 +80,21 @@ def maxmin_fair_numpy(flow_links: Sequence[Sequence[Hashable]],
                 if i in active.get(l, ()):  # remove from all its links
                     active[l].discard(i)
                     remaining[l] -= share
-        if share >= 1.0:
-            # everything else is also unconstrained at ≥1; clamp and exit
-            rates[~frozen] = 1.0
+        if share >= flow_cap:
+            # everything else is also NIC-limited; clamp and exit
+            rates[~frozen] = flow_cap
             break
-    return np.clip(rates, 0.0, 1.0)
+    return np.clip(rates, 0.0, flow_cap)
 
 
 if _HAVE_JAX:
 
     @partial(jax.jit, static_argnames=("max_iters",))
     def _maxmin_kernel(incidence: jnp.ndarray, cap: jnp.ndarray,
+                       flow_cap: jnp.ndarray,
                        max_iters: int = 0) -> jnp.ndarray:
-        """incidence: (links, flows) 0/1; cap: (links,). Returns (flows,)."""
+        """incidence: (links, flows) 0/1; cap: (links,); flow_cap: scalar
+        per-flow ceiling (the NIC tier).  Returns (flows,)."""
         nlinks, nflows = incidence.shape
         iters = max_iters or nlinks + 1
 
@@ -95,7 +103,7 @@ if _HAVE_JAX:
             act = incidence * (1.0 - frozen)[None, :]
             nact = act.sum(axis=1)
             share = jnp.where(nact > 0, remaining / jnp.maximum(nact, 1), jnp.inf)
-            share = jnp.minimum(share, 1.0)
+            share = jnp.minimum(share, flow_cap)
             b = jnp.argmin(share)
             s = share[b]
             hit = act[b] > 0          # flows on the bottleneck link
@@ -116,23 +124,24 @@ if _HAVE_JAX:
             act = incidence * (1.0 - frozen)[None, :]
             return jnp.logical_and(act.sum() > 0, it < iters)
 
-        rates0 = jnp.ones(nflows)
+        rates0 = jnp.full(nflows, flow_cap, dtype=jnp.float32)
         frozen0 = (incidence.sum(axis=0) == 0).astype(jnp.float32)
         state = jax.lax.while_loop(
             cond, body, (rates0, frozen0, cap.astype(jnp.float32), 0))
-        return jnp.clip(state[0], 0.0, 1.0)
+        return jnp.clip(state[0], 0.0, flow_cap)
 
     def maxmin_fair_jax(flow_links: Sequence[Sequence[Hashable]],
-                        capacity: Dict[Hashable, float] | float = 1.0
-                        ) -> np.ndarray:
-        """Dense-incidence wrapper around the jitted water-filling kernel."""
+                        capacity: Dict[Hashable, float] | float = 1.0,
+                        flow_cap: float = 1.0) -> np.ndarray:
+        """Dense-incidence wrapper around the jitted water-filling kernel.
+        ``flow_cap`` as in :func:`maxmin_fair_numpy`."""
         nflows = len(flow_links)
         link_ids: Dict[Hashable, int] = {}
         for ls in flow_links:
             for l in ls:
                 link_ids.setdefault(l, len(link_ids))
         if not link_ids:
-            return np.ones(nflows)
+            return np.full(nflows, float(flow_cap))
         inc = np.zeros((len(link_ids), nflows), dtype=np.float32)
         for i, ls in enumerate(flow_links):
             for l in ls:
@@ -142,17 +151,20 @@ if _HAVE_JAX:
         else:
             cap = np.array([capacity.get(l, 1.0) for l in link_ids],
                            dtype=np.float32)
-        return np.asarray(_maxmin_kernel(jnp.asarray(inc), jnp.asarray(cap)))
+        return np.asarray(_maxmin_kernel(
+            jnp.asarray(inc), jnp.asarray(cap),
+            jnp.float32(flow_cap)))
 else:  # pragma: no cover
     maxmin_fair_jax = maxmin_fair_numpy
 
 
-def maxmin_fair(flow_links, capacity=1.0, backend: str = "numpy") -> np.ndarray:
+def maxmin_fair(flow_links, capacity=1.0, backend: str = "numpy",
+                flow_cap: float = 1.0) -> np.ndarray:
     if backend == "jax":
-        return maxmin_fair_jax(flow_links, capacity)
+        return maxmin_fair_jax(flow_links, capacity, flow_cap)
     if backend == "auto":
-        return maxmin_fair_auto(flow_links, capacity)
-    return maxmin_fair_numpy(flow_links, capacity)
+        return maxmin_fair_auto(flow_links, capacity, flow_cap)
+    return maxmin_fair_numpy(flow_links, capacity, flow_cap)
 
 
 # ---------------------------------------------------------------------------
@@ -222,15 +234,15 @@ def maxmin_crossover() -> float:
 
 
 def maxmin_fair_auto(flow_links: Sequence[Sequence[Hashable]],
-                     capacity: Dict[Hashable, float] | float = 1.0
-                     ) -> np.ndarray:
+                     capacity: Dict[Hashable, float] | float = 1.0,
+                     flow_cap: float = 1.0) -> np.ndarray:
     """Size-dispatched max-min: sparse numpy below the crossover, the dense
     jitted JAX kernel above it.  Both solvers agree to float32 resolution
     (asserted by ``tests/test_simulator.py``)."""
     size = problem_size(flow_links)
     if size < AUTOTUNE_FLOOR or size < maxmin_crossover():
-        return maxmin_fair_numpy(flow_links, capacity)
-    return maxmin_fair_jax(flow_links, capacity)
+        return maxmin_fair_numpy(flow_links, capacity, flow_cap)
+    return maxmin_fair_jax(flow_links, capacity, flow_cap)
 
 
 # ---------------------------------------------------------------------------

@@ -153,10 +153,13 @@ class _RunningJob:
     phases: List[Tuple[str, float, List[list], Counter]] = field(default_factory=list)
     union_links: Counter = field(default_factory=Counter)
     intra_server: bool = False
+    # straggler model (docs/heterogeneous.md): the slowest member server's
+    # relative compute scale; 1.0 on homogeneous fleets (exact no-op)
+    compute_scale: float = 1.0
 
     def iter_effective(self, shares: List[float], link_gbps: float) -> float:
         j = self.job
-        c = j.compute_time()
+        c = j.compute_time() / self.compute_scale
         bw_mult = NVLINK_SPEEDUP if self.intra_server else 1.0
         bw = link_gbps * GBPS * bw_mult
         t_ar = t_a2a = 0.0
@@ -180,7 +183,8 @@ class _RunJobV2:
     """
 
     __slots__ = ("job", "placement", "iters_left", "iter_ideal", "rate",
-                 "last_update", "t_fin", "intra_server", "kinds", "nbytes",
+                 "last_update", "t_fin", "intra_server", "compute_scale",
+                 "kinds", "nbytes",
                  "nb_arr", "nar", "cat_idx", "cat_cnt", "cat_ucnt", "pptr",
                  "uidx", "uval", "order", "version", "slot")
 
@@ -195,6 +199,7 @@ class _RunJobV2:
         self.last_update = 0.0
         self.t_fin = math.inf
         self.intra_server = intra
+        self.compute_scale = 1.0     # straggler scale, set by the builder
         self.kinds: List[str] = []
         self.nbytes: List[float] = []
         self.nb_arr: Optional[np.ndarray] = None    # nbytes as float64 array
@@ -217,7 +222,7 @@ class _RunJobV2:
         # differently.  AR phases are contiguous before the a2a tail, so
         # the two slices reproduce the loop's separate accumulators.
         j = self.job
-        c = j.compute_time()
+        c = j.compute_time() / self.compute_scale
         bw_mult = NVLINK_SPEEDUP if self.intra_server else 1.0
         bw = link_gbps * GBPS * bw_mult
         if self.nb_arr is None:
@@ -402,6 +407,26 @@ class ClusterSimulator:
             out[a if kind == "up" else b] += c
         return out
 
+    def leaf_comm_duty(self) -> np.ndarray:
+        """Per-leaf sum of resident running jobs' communication duty
+        cycles (:func:`repro.core.patterns.comm_duty_cycle`) — the
+        time-domain load view for phase-compatibility placement
+        (``contention-affinity-time``).  A job contributes its duty to
+        every leaf hosting at least one of its GPUs.  Engine-agnostic:
+        both engines keep the same ``running`` map, and ``math.fsum``
+        makes the per-leaf totals independent of iteration order, so
+        placements scored from this view are engine-independent."""
+        from .patterns import comm_duty_cycle
+        s = self.spec
+        per_leaf: List[List[float]] = [[] for _ in range(s.num_leafs)]
+        for rj in self.running.values():
+            d = comm_duty_cycle(rj.job, s.link_gbps)
+            if d <= 0.0:
+                continue
+            for leaf in {s.leaf_of_gpu(g) for g in rj.placement.gpus}:
+                per_leaf[leaf].append(d)
+        return np.asarray([math.fsum(v) for v in per_leaf])
+
     # =======================================================================
     # v1 engine: Counter-backed flow/rate machinery + scan event loop
     # =======================================================================
@@ -414,7 +439,8 @@ class ClusterSimulator:
                          iters_left=(float(job.num_iters)
                                      if job.remaining_iters is None
                                      else job.remaining_iters),
-                         iter_ideal=1.0, intra_server=intra)
+                         iter_ideal=1.0, intra_server=intra,
+                         compute_scale=self._straggler_scale(gpus))
         routing = self.routing
         if placement.routing_maps and isinstance(routing, SourceRouting):
             # job-specific source maps over its reserved links
@@ -494,9 +520,34 @@ class ClusterSimulator:
             rj.phases.append((kind, nbytes, [], counts))
             for l, c in counts.items():
                 rj.union_links[l] = max(rj.union_links[l], c)
-        rj.iter_ideal = rj.iter_effective([1.0] * len(rj.phases),
-                                          spec.link_gbps)
+        nph = len(rj.phases)
+        if intra or not spec.is_hetero:
+            ref = [1.0] * nph
+        else:
+            # contention-free reference shares under per-tier speeds: a
+            # phase with fabric links runs at the slower of the NIC and
+            # leaf tiers, a link-less phase at NIC speed, an isolated
+            # (reserved) phase at the fabric tier — so rate = 1.0 means
+            # "as fast as this placement's wiring allows", and every
+            # formula degenerates bitwise to 1.0 when the ratios are 1.0
+            fab = min(spec.nic_ratio, spec.leaf_ratio)
+            if isolated:
+                ref = [fab] * nph
+            else:
+                ref = [fab if counts else spec.nic_ratio
+                       for _, _, _, counts in rj.phases]
+        rj.iter_ideal = rj.iter_effective(ref, spec.link_gbps)
         return rj
+
+    def _straggler_scale(self, gpus: Sequence[int]) -> float:
+        """Slowest member server's compute scale (1.0 when homogeneous) —
+        the straggler model: data-parallel iterations synchronise on the
+        slowest participant, so the whole job computes at its pace."""
+        spec = self.spec
+        if spec.server_scale is None:
+            return 1.0
+        return min(spec.scale_of_server(spec.server_of_gpu(g))
+                   for g in gpus)
 
     # -- running-set mutation (keeps the link index consistent) -------------
     def _add_running(self, job: Job, placement: Placement) -> None:
@@ -530,14 +581,32 @@ class ClusterSimulator:
 
     def _job_rate(self, rj: _RunningJob) -> float:
         """Max-min share → progress rate of one job under the current
-        maintained global link load."""
-        shares = []
-        for kind, nbytes, _links, counts in rj.phases:
-            worst = 1
-            for l, cnt in counts.items():
-                other = self._link_load[l] - rj.union_links.get(l, 0)
-                worst = max(worst, other + cnt)
-            shares.append(1.0 / worst)
+        maintained global link load.  Under a hetero spec the share of a
+        fabric phase is ``min(nic, leaf / worst)`` — the NIC tier caps what
+        one flow can push regardless of fabric headroom — and a link-less
+        phase runs at NIC speed; both reduce bitwise to the homogeneous
+        ``1.0 / worst`` (and 1.0) when every ratio is 1.0."""
+        spec = self.spec
+        if spec.is_hetero and not rj.intra_server:
+            r_nic, r_leaf = spec.nic_ratio, spec.leaf_ratio
+            shares = []
+            for kind, nbytes, _links, counts in rj.phases:
+                if not counts:
+                    shares.append(r_nic)
+                    continue
+                worst = 1
+                for l, cnt in counts.items():
+                    other = self._link_load[l] - rj.union_links.get(l, 0)
+                    worst = max(worst, other + cnt)
+                shares.append(min(r_nic, r_leaf / worst))
+        else:
+            shares = []
+            for kind, nbytes, _links, counts in rj.phases:
+                worst = 1
+                for l, cnt in counts.items():
+                    other = self._link_load[l] - rj.union_links.get(l, 0)
+                    worst = max(worst, other + cnt)
+                shares.append(1.0 / worst)
         eff = rj.iter_effective(shares, self.spec.link_gbps)
         return rj.iter_ideal / eff if eff > 0 else 1.0
 
@@ -878,6 +947,7 @@ class ClusterSimulator:
         gps = spec.gpus_per_server
         intra = min(gpus) // gps == max(gpus) // gps
         rj = _RunJobV2(job, placement, intra)
+        rj.compute_scale = self._straggler_scale(gpus)
         isolated = self.isolated
         n = len(gpus)
         mat: Optional[np.ndarray] = None
@@ -918,7 +988,7 @@ class ClusterSimulator:
                                  mat[nar:].max(axis=0, keepdims=True)])
         if mat is not None:
             self._attach_dense_phases(rj, mat)
-        self._seal_v2(rj)
+        self._seal_v2(rj, mat)
         return rj
 
     @staticmethod
@@ -938,14 +1008,29 @@ class ClusterSimulator:
             rj.nbytes.append(share)
         return False
 
-    def _seal_v2(self, rj: _RunJobV2) -> None:
+    def _seal_v2(self, rj: _RunJobV2,
+                 mat: Optional[np.ndarray] = None) -> None:
         """Freeze the phase byte counts into array form and compute the
-        contention-free iteration time."""
+        contention-free iteration time.  ``mat`` (per-phase dense link
+        counts, when the dense build produced one) tells the hetero path
+        which phases touch fabric links — the same fabric/NIC reference
+        share rule as ``_build_running`` (bitwise twin)."""
         if rj.kinds:
             rj.nb_arr = np.asarray(rj.nbytes, dtype=np.float64)
             rj.nar = sum(1 for k in rj.kinds if k != "a2a")
-        rj.iter_ideal = rj.iter_effective(np.ones(len(rj.kinds)),
-                                          self.spec.link_gbps)
+        spec = self.spec
+        n = len(rj.kinds)
+        if rj.intra_server or not spec.is_hetero:
+            ref = np.ones(n)
+        else:
+            fab = min(spec.nic_ratio, spec.leaf_ratio)
+            if self.isolated:
+                ref = np.full(n, fab)
+            elif mat is None:
+                ref = np.full(n, spec.nic_ratio)
+            else:
+                ref = np.where(mat.any(axis=1), fab, spec.nic_ratio)
+        rj.iter_ideal = rj.iter_effective(ref, spec.link_gbps)
 
     def _densify_v1_build(self, job: Job, placement: Placement,
                           rj: _RunJobV2) -> _RunJobV2:
@@ -1062,10 +1147,25 @@ class ClusterSimulator:
             ptr = np.concatenate(ptrs)
         worst = phase_worst_loads(vals, ptr)
         gbps = self.spec.link_gbps
+        hetero = self.spec.is_hetero
+        if hetero:
+            r_nic, r_leaf = self.spec.nic_ratio, self.spec.leaf_ratio
         p0 = 0
         for rj in affected:
             nph = len(rj.pptr) - 1
-            shares = 1.0 / np.maximum(worst[p0:p0 + nph], 1)
+            if hetero:
+                # vector twin of the hetero _job_rate: worst == 0 marks a
+                # link-less phase (empty CSR segment ⇔ v1's empty Counter,
+                # whose entries are always ≥ 1) running at NIC speed;
+                # fabric phases cap at min(nic, leaf / worst).  Both
+                # reduce bitwise to 1.0 / max(worst, 1) at unit ratios.
+                w = worst[p0:p0 + nph]
+                shares = np.where(w > 0,
+                                  np.minimum(r_nic,
+                                             r_leaf / np.maximum(w, 1)),
+                                  r_nic)
+            else:
+                shares = 1.0 / np.maximum(worst[p0:p0 + nph], 1)
             p0 += nph
             eff = rj.iter_effective(shares, gbps)
             new = rj.iter_ideal / eff if eff > 0 else 1.0

@@ -47,10 +47,14 @@ contention-aware placements:
     int64 vector over :class:`repro.core.routing.LinkSpace` ids
   * ``ctx.leaf_link_load()`` — that load folded to one int64 per leaf
     (uplinks + downlinks touching the leaf)
+  * ``ctx.leaf_comm_duty()`` — per-leaf sum of resident jobs'
+    communication duty cycles (:func:`repro.core.patterns.comm_duty_cycle`)
+    — the time-domain view behind ``contention-affinity-time``
+    (docs/heterogeneous.md)
 
-Both views are maintained identically by the v1 and v2 engines (integer
-arithmetic end-to-end), so a placement decided from them cannot break the
-v1 ≡ v2 bit-parity contract.
+All views are maintained identically by the v1 and v2 engines (integer
+arithmetic, or exactly-rounded ``fsum`` totals for the duty view), so a
+placement decided from them cannot break the v1 ≡ v2 bit-parity contract.
 
 Registry lifecycle: registration is process-global and normally happens at
 import time.  Strategies registered at runtime are visible immediately
@@ -211,3 +215,4 @@ def registered_strategies() -> Dict[str, Strategy]:
 # contention_affinity registers itself through the public API above.
 from . import builtin as _builtin                      # noqa: E402,F401
 from . import contention_affinity as _affinity         # noqa: E402,F401
+from . import contention_affinity_time as _affinity_t  # noqa: E402,F401

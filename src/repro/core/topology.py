@@ -18,6 +18,7 @@ changing the effective capacity matrix ``C[n][m]`` (paper §7, Table 1).
 from __future__ import annotations
 
 import dataclasses
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -45,6 +46,20 @@ class ClusterSpec:
     # with 1.5x num_spines (Table 4 "Redundance" baseline)
     uplink_factor: float = 1.0
     num_ocs: int = 0  # 0 → static electrical fabric
+    # -- heterogeneous fabric (docs/heterogeneous.md) ----------------------
+    # Per-tier link speeds: None (default) keeps the homogeneous fabric
+    # where every tier runs at link_gbps.  Setting either field — even to
+    # link_gbps itself — opts the spec into the speed-aware rate
+    # resolution path (``is_hetero``), whose degenerate case is proven
+    # byte-identical to the homogeneous arithmetic (tests/test_hetero.py).
+    leaf_uplink_gbps: Optional[float] = None   # leaf↔spine fabric tier
+    server_nic_gbps: Optional[float] = None    # server NIC tier
+    # Per-server GPU generation: relative compute scale (1.0 = the
+    # reference generation; 2.0 = twice as fast) and an optional name tag
+    # per server.  A job's compute time scales by its *slowest* member
+    # (straggler model).  Length must equal num_servers.
+    server_scale: Optional[Tuple[float, ...]] = None
+    server_gen: Optional[Tuple[str, ...]] = None
 
     def __post_init__(self) -> None:
         if self.gpus_per_leaf % self.gpus_per_server:
@@ -56,6 +71,37 @@ class ClusterSpec:
             down = self.downlinks_per_spine
             if up % self.num_ocs or down % self.num_ocs:
                 raise ValueError("num_ocs must divide per-leaf uplinks and per-spine downlinks")
+        for name in ("leaf_uplink_gbps", "server_nic_gbps"):
+            v = getattr(self, name)
+            if v is not None and (not isinstance(v, (int, float))
+                                  or not v > 0):
+                raise ValueError(
+                    f"{name} must be a positive speed in Gbps (got {v!r}); "
+                    f"leave it None for the homogeneous {self.link_gbps:g}G "
+                    f"fabric")
+        if self.server_scale is not None:
+            if len(self.server_scale) != self.num_servers:
+                raise ValueError(
+                    f"server_scale needs one entry per server "
+                    f"(got {len(self.server_scale)}, cluster has "
+                    f"{self.num_servers}); use apply_gpu_mix() to expand a "
+                    f"generation mix into per-server scales")
+            for i, s in enumerate(self.server_scale):
+                if not isinstance(s, (int, float)) or not s > 0:
+                    raise ValueError(
+                        f"server_scale[{i}] must be a positive relative "
+                        f"compute scale (got {s!r}); 1.0 is the reference "
+                        f"generation")
+        if self.server_gen is not None:
+            if self.server_scale is None:
+                raise ValueError(
+                    "server_gen tags need matching server_scale values; "
+                    "pass both (apply_gpu_mix() builds the pair)")
+            if len(self.server_gen) != self.num_servers:
+                raise ValueError(
+                    f"server_gen needs one tag per server "
+                    f"(got {len(self.server_gen)}, cluster has "
+                    f"{self.num_servers})")
 
     # -- derived sizes ---------------------------------------------------
     @property
@@ -82,6 +128,38 @@ class ClusterSpec:
     def base_channels(self) -> int:
         """Links between every (leaf, spine) pair in the uniform wiring."""
         return self.uplinks_per_leaf // self.num_spines
+
+    # -- heterogeneous-fabric views (docs/heterogeneous.md) ----------------
+    @property
+    def is_hetero(self) -> bool:
+        """Whether the spec opts into speed-aware rate resolution.  Any
+        hetero field explicitly set — even to its homogeneous value —
+        counts: the degenerate arithmetic is byte-identical, so explicit
+        1.0-ratio specs exercise the hetero path while reproducing the
+        homogeneous schedules exactly (tests/test_hetero.py)."""
+        return (self.leaf_uplink_gbps is not None
+                or self.server_nic_gbps is not None
+                or self.server_scale is not None)
+
+    @property
+    def leaf_ratio(self) -> float:
+        """Leaf↔spine tier speed relative to the reference link_gbps."""
+        if self.leaf_uplink_gbps is None:
+            return 1.0
+        return self.leaf_uplink_gbps / self.link_gbps
+
+    @property
+    def nic_ratio(self) -> float:
+        """Server-NIC tier speed relative to the reference link_gbps."""
+        if self.server_nic_gbps is None:
+            return 1.0
+        return self.server_nic_gbps / self.link_gbps
+
+    def scale_of_server(self, server: int) -> float:
+        """Relative compute scale of ``server`` (1.0 when homogeneous)."""
+        if self.server_scale is None:
+            return 1.0
+        return self.server_scale[server]
 
     # -- id mapping --------------------------------------------------------
     def leaf_of_gpu(self, gpu: int) -> int:
@@ -119,6 +197,46 @@ CLUSTER2048_OCS = dataclasses.replace(CLUSTER2048, num_ocs=32)
 # logical spines, 2 servers per leaf.
 TESTBED32 = ClusterSpec(num_leafs=4, num_spines=8, gpus_per_leaf=8,
                         gpus_per_server=4, channels=1, num_ocs=0)
+
+
+def apply_gpu_mix(spec: ClusterSpec,
+                  mix: List[Tuple[str, float, float]]) -> ClusterSpec:
+    """Expand a GPU-generation mix into per-server tags/scales on ``spec``.
+
+    ``mix`` is ``[(generation_name, compute_scale, fraction), ...]``;
+    fractions must be positive and sum to 1.  Servers are assigned in
+    contiguous id blocks, in the listed order, with the *last* generation
+    absorbing the rounding remainder — a deterministic layout so two specs
+    built from the same mix are equal (and campaign cells reproducible).
+    """
+    if not mix:
+        raise ValueError("gpu mix is empty; pass at least one "
+                         "(name, scale, fraction) entry")
+    for name, scale, frac in mix:
+        if not isinstance(scale, (int, float)) or not scale > 0:
+            raise ValueError(f"gpu mix {name!r}: compute scale must be "
+                             f"positive (got {scale!r})")
+        if not isinstance(frac, (int, float)) or not frac > 0:
+            raise ValueError(f"gpu mix {name!r}: fraction must be "
+                             f"positive (got {frac!r})")
+    total = math.fsum(f for _, _, f in mix)
+    if abs(total - 1.0) > 1e-9:
+        raise ValueError(f"gpu mix fractions must sum to 1 "
+                         f"(got {total:g}); scale them or drop an entry")
+    n = spec.num_servers
+    counts = [int(f * n) for _, _, f in mix]
+    counts[-1] += n - sum(counts)          # remainder to the last entry
+    if counts[-1] <= 0:
+        raise ValueError(f"gpu mix leaves no servers for "
+                         f"{mix[-1][0]!r} on a {n}-server cluster; use "
+                         f"coarser fractions")
+    gens: List[str] = []
+    scales: List[float] = []
+    for (name, scale, _), cnt in zip(mix, counts):
+        gens += [name] * cnt
+        scales += [float(scale)] * cnt
+    return dataclasses.replace(spec, server_gen=tuple(gens),
+                               server_scale=tuple(scales))
 
 
 @dataclass

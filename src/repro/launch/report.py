@@ -52,6 +52,11 @@ SERIES_COLORS: Dict[str, str] = {
     # validate all-pairs)
     "best (defrag)": "#2a78d6", "best (no defrag)": "#eb6834",
     "ocs-relax (scattered)": "#1baf7a",
+    # hetero-interleave variants: offset-blind in warm tones, offset-aware
+    # in cool tones; hetero fleets darker than their homogeneous twins
+    "contention-affinity-time": "#1baf7a",
+    "affinity / homog": "#eda100", "affinity / hetero": "#e34948",
+    "affinity-time / homog": "#2a78d6", "affinity-time / hetero": "#4a3aa7",
 }
 _FALLBACK_COLOR = "#52514e"
 _TEXT = "#0b0b0b"

@@ -150,6 +150,17 @@ def campaign_main(argv) -> None:
                          "(fractions), server-mtbf / link-mtbf (seconds), "
                          "fail-duration, restart-iters — e.g. "
                          "--events preempt=0.1,server-mtbf=20000")
+    ap.add_argument("--gpu-mix", default=None, metavar="NAME:SCALE:FRAC,...",
+                    help="heterogeneous fleet: partition servers into GPU "
+                         "generations with relative compute scales — e.g. "
+                         "--gpu-mix h100:1.0:0.5,a100:0.62:0.5 (fractions "
+                         "must sum to 1; a job runs at its slowest "
+                         "member's scale — docs/heterogeneous.md)")
+    ap.add_argument("--link-speeds", default=None, metavar="K=GBPS[,K=GBPS]",
+                    help="per-tier fabric speeds: keys leaf (leaf↔spine "
+                         "uplinks) / nic (server NICs), Gbps — e.g. "
+                         "--link-speeds leaf=200,nic=100 "
+                         "(docs/heterogeneous.md)")
     ap.add_argument("--defrag", type=float, default=0.0, metavar="SECONDS",
                     help="migration-defragmentation tick period (0 = off; "
                          "only strategies with supports_migration move "
@@ -294,6 +305,49 @@ def campaign_main(argv) -> None:
             churn[keymap[key]] = fval
 
     spec, ocs_spec = clusters[args.cluster]
+    if args.link_speeds:
+        import dataclasses
+        keymap = {"leaf": "leaf_uplink_gbps", "nic": "server_nic_gbps"}
+        speeds = {}
+        for item in args.link_speeds.split(","):
+            key, _, val = item.partition("=")
+            key = key.strip()
+            if key not in keymap or not val:
+                ap.error(f"--link-speeds: bad entry {item!r}; use K=GBPS "
+                         f"with K in {sorted(keymap)} — e.g. "
+                         f"--link-speeds leaf=200,nic=100")
+            try:
+                fval = float(val)
+            except ValueError:
+                ap.error(f"--link-speeds: {key}={val!r} is not a number")
+            speeds[keymap[key]] = fval
+        try:
+            spec = dataclasses.replace(spec, **speeds)
+            if ocs_spec is not None:
+                ocs_spec = dataclasses.replace(ocs_spec, **speeds)
+        except ValueError as e:        # non-positive speeds etc.
+            ap.error(f"--link-speeds: {e}")
+    if args.gpu_mix:
+        from repro.core import apply_gpu_mix
+        mix = []
+        for item in args.gpu_mix.split(","):
+            parts = item.split(":")
+            if len(parts) != 3 or not parts[0].strip():
+                ap.error(f"--gpu-mix: bad entry {item!r}; use "
+                         f"NAME:SCALE:FRACTION — e.g. "
+                         f"--gpu-mix h100:1.0:0.5,a100:0.62:0.5")
+            try:
+                scale, frac = float(parts[1]), float(parts[2])
+            except ValueError:
+                ap.error(f"--gpu-mix: {item!r} has a non-numeric "
+                         f"scale/fraction")
+            mix.append((parts[0].strip(), scale, frac))
+        try:
+            spec = apply_gpu_mix(spec, mix)
+            if ocs_spec is not None:
+                ocs_spec = apply_gpu_mix(ocs_spec, mix)
+        except ValueError as e:
+            ap.error(f"--gpu-mix: {e}")
     grid = CampaignGrid(strategies=tuple(args.strategies),
                         schedulers=tuple(args.schedulers),
                         loads=tuple(args.loads), seeds=tuple(args.seeds))

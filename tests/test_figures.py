@@ -25,7 +25,7 @@ def _by_name(tables):
 def test_registry_shape():
     names = figure_names()
     assert names == ("jct-vs-load", "contention-cdf", "frag-timeline",
-                     "ocs-comparison", "real-trace")
+                     "ocs-comparison", "real-trace", "hetero-interleave")
     for n in names:
         assert FIGURES[n].name == n
 
@@ -109,6 +109,37 @@ def test_real_trace_smoke_golden(smoke_tables):
     assert got["ecmp"][0] == 9041.0
     assert got["sr"][0] == 9025.5
     assert got["vclos"][0] == 11469.1
+
+
+def test_hetero_interleave_smoke_golden(smoke_tables):
+    """Four paired variants over one phase-complementary trace; the mean
+    JCTs in the meta are the committed gallery's numbers."""
+    t = _by_name(smoke_tables)["hetero-interleave"]
+    meta = t.meta_dict()
+    assert t.series_values() == ["affinity / homog", "affinity-time / homog",
+                                 "affinity / hetero",
+                                 "affinity-time / hetero"]
+    assert meta["mean_jct[affinity / homog]"] == 1754.7
+    assert meta["mean_jct[affinity-time / homog]"] == 1606.1
+    assert meta["mean_jct[affinity / hetero]"] == 2330.2
+    assert meta["mean_jct[affinity-time / hetero]"] == 2295.0
+    # the mixed-generation fleet shifts every variant right (stragglers +
+    # thinner NICs), but never flips the offset-aware advantage
+    assert meta["mean_jct[affinity / hetero]"] > \
+        meta["mean_jct[affinity / homog]"]
+
+
+def test_offset_aware_strictly_beats_offset_blind(smoke_tables):
+    """The headline hetero-interleave claim as an inequality, not a
+    snapshot: on the phase-complementary workload the duty-cycle-scoring
+    plugin strictly beats the offset-blind one on BOTH fleets — if a
+    refactor erodes the margin to zero this fails even when the goldens
+    above are updated mechanically."""
+    meta = _by_name(smoke_tables)["hetero-interleave"].meta_dict()
+    for fleet in ("homog", "hetero"):
+        aware = meta[f"mean_jct[affinity-time / {fleet}]"]
+        blind = meta[f"mean_jct[affinity / {fleet}]"]
+        assert aware < blind, fleet
 
 
 def test_qualitative_orderings_hold(smoke_tables):

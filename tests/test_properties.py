@@ -363,3 +363,84 @@ def test_random_crash_schedule_resume_equals_clean(crash_cells, store,
             assert c.report.avg_jct == ref.avg_jct
             assert c.report.avg_jwt == ref.avg_jwt
             assert c.report.event_log == ref.event_log
+
+
+# ---------------------------------------------------------------------------
+# Part 5 — heterogeneous fabrics + time-domain interleaving (the hetero
+# tentpole, tests/test_hetero.py): speed-aware fair share respects every
+# capacity, straggler scaling is monotone, duty scoring is order-free
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def capped_flow_problem(draw):
+    """Random flow×link incidence + per-link capacities + a NIC cap."""
+    nlinks = draw(st.integers(1, 6))
+    nflows = draw(st.integers(1, 12))
+    flow_links = [draw(st.lists(st.integers(0, nlinks - 1), min_size=0,
+                                max_size=nlinks, unique=True))
+                  for _ in range(nflows)]
+    caps = {l: draw(st.floats(0.1, 4.0, allow_nan=False,
+                              allow_infinity=False))
+            for l in range(nlinks)}
+    flow_cap = draw(st.floats(0.05, 2.0, allow_nan=False,
+                              allow_infinity=False))
+    return flow_links, caps, flow_cap
+
+
+@settings(max_examples=150, deadline=None)
+@given(problem=capped_flow_problem())
+def test_speed_aware_fair_share_respects_every_capacity(problem):
+    """The flow_cap-parametrised water-filling (the old hard-coded unit
+    NIC bound, now spec-derived on hetero fabrics) may never allocate past
+    *any* link's capacity nor past the per-flow NIC ceiling."""
+    from repro.core.fairshare import maxmin_fair_numpy
+    flow_links, caps, flow_cap = problem
+    rates = maxmin_fair_numpy(flow_links, caps, flow_cap=flow_cap)
+    assert np.all(rates >= 0.0)
+    assert np.all(rates <= flow_cap + 1e-12)
+    for link, cap in caps.items():
+        used = sum(rates[i] for i, ls in enumerate(flow_links)
+                   if link in ls)
+        # progressive filling may fill a bottleneck exactly; only genuine
+        # over-allocation (beyond float accumulation) is a violation
+        assert used <= cap + 1e-9 * max(1, len(flow_links))
+
+
+@settings(max_examples=60, deadline=None)
+@given(model=st.sampled_from(_EV_MODELS),
+       num_gpus=st.sampled_from([1, 2, 4, 8, 16]),
+       s1=st.floats(0.05, 1.0, allow_nan=False, allow_infinity=False),
+       s2=st.floats(0.05, 1.0, allow_nan=False, allow_infinity=False))
+def test_straggler_scaling_is_monotone(model, num_gpus, s1, s2):
+    """A slower slowest-member can never finish a job earlier: JCT is
+    monotone non-increasing in the fleet's compute scale (the derivative
+    of effective iteration time in compute time is ≥ 1 − β > 0)."""
+    import dataclasses
+
+    from repro.core.simulator import simulate
+    lo, hi = min(s1, s2), max(s1, s2)
+    jobs = [Job(0, model, num_gpus, 32, 0.0, 50)]
+
+    def jct(scale):
+        spec = dataclasses.replace(
+            SPEC, server_scale=(scale,) * SPEC.num_servers)
+        return simulate(spec, _fresh(jobs), "ecmp").jcts[0]
+
+    assert jct(lo) >= jct(hi)
+
+
+@settings(max_examples=200, deadline=None)
+@given(duties=st.lists(st.floats(0.0, 1.0, allow_nan=False,
+                                 allow_infinity=False), max_size=10),
+       seed=st.integers(0, 2 ** 16))
+def test_phase_offset_scoring_is_permutation_invariant(duties, seed):
+    """duty_overflow is fsum-backed: any co-location order of the same
+    resident duty cycles produces the identical score bit-for-bit, so the
+    contention-affinity-time placement cannot depend on job arrival
+    order-of-insertion."""
+    from repro.core.patterns import duty_overflow
+    rng = np.random.default_rng(seed)
+    perm = [duties[i] for i in rng.permutation(len(duties))]
+    assert duty_overflow(perm) == duty_overflow(duties)
+    assert duty_overflow(duties) >= 0.0
